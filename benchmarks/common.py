@@ -1,0 +1,70 @@
+"""Shared benchmark harness: timing, CSV emission, result registry."""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable
+
+import jax
+
+# The paper's accuracy tiers (setup #3: <1e-14 eigenvalue error) require f64.
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/bench")
+
+
+@dataclasses.dataclass
+class Row:
+    bench: str
+    case: str
+    value: float
+    unit: str
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    def format(self) -> str:
+        extras = " ".join(f"{k}={v}" for k, v in self.extra.items())
+        return f"{self.bench:28s} {self.case:42s} {self.value:>12.6g} {self.unit:10s} {extras}"
+
+
+class Reporter:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: list[Row] = []
+
+    def add(self, case: str, value: float, unit: str, **extra) -> None:
+        row = Row(self.name, case, float(value), unit, extra)
+        self.rows.append(row)
+        print(row.format(), flush=True)
+
+    def save(self) -> str:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, f"{self.name}.json")
+        with open(path, "w") as f:
+            json.dump([dataclasses.asdict(r) for r in self.rows], f, indent=1)
+        return path
+
+
+def timeit(fn: Callable[[], Any], *, warmup: int = 1, repeats: int = 3
+           ) -> tuple[float, Any]:
+    """Median wall time (s) of fn(); blocks on jax arrays."""
+    out = None
+    for _ in range(warmup):
+        out = fn()
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def quick() -> bool:
+    return os.environ.get("REPRO_BENCH_FULL", "0") != "1"

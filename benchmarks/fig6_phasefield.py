@@ -1,0 +1,70 @@
+"""Figure 6 — semi-supervised learning via the Allen–Cahn phase-field method.
+
+Paper protocol (Section 6.2.2): 5-class Gaussian-blob data (relabeled
+spiral), k = 5 smallest eigenpairs of L_s; NFFT-Lanczos (N=32, m=4,
+eps_B=0) vs traditional Nyström (L scaled), tau=0.1, eps=10, omega0=1e4,
+c = 2/eps + omega0; classification accuracy vs samples-per-class s.
+
+Claim reproduced: NFFT eigenvectors give consistently higher accuracy than
+Nyström's, especially at small s, and the worst runs are far less bad.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Reporter, quick
+from repro.core import SETUP_2, make_kernel, make_normalized_adjacency
+from repro.core.nystrom import nystrom_traditional
+from repro.data.synthetic import gaussian_blobs
+from repro.graph.ssl import allen_cahn_multiclass
+
+SIGMA = 3.5
+
+
+def run(report: Reporter | None = None) -> None:
+    rep = report or Reporter("fig6_phasefield")
+    n = 2000 if quick() else 20000
+    n_classes = 5
+    samples = (1, 2, 3, 5) if quick() else (1, 2, 3, 4, 5, 7, 10)
+    instances = 3 if quick() else 10
+    kernel = make_kernel("gaussian", sigma=SIGMA)
+
+    acc_nfft: dict[int, list] = {s: [] for s in samples}
+    acc_nys: dict[int, list] = {s: [] for s in samples}
+    for inst in range(instances):
+        points, labels = gaussian_blobs(n, n_classes, seed=40 + inst)
+        pts = jnp.asarray(points)
+        labs = jnp.asarray(labels)
+        op = make_normalized_adjacency(kernel, pts, SETUP_2)
+
+        nys = nystrom_traditional(kernel, pts, n_classes,
+                                  max(n // 20, 20),
+                                  key=jax.random.PRNGKey(inst))
+
+        for s in samples:
+            key = jax.random.PRNGKey(1000 * inst + s)
+            pred = allen_cahn_multiclass(op, labs, n_classes, s, k=n_classes,
+                                         key=key)
+            acc_nfft[s].append(float(jnp.mean(pred == labs)))
+
+            class R:  # adapt Nyström output to the eigsh result shape
+                eigenvalues = nys.eigenvalues
+                eigenvectors = nys.eigenvectors
+            pred2 = allen_cahn_multiclass(op, labs, n_classes, s,
+                                          k=n_classes, key=key,
+                                          eigsh_fn=lambda: R)
+            acc_nys[s].append(float(jnp.mean(pred2 == labs)))
+
+    for s in samples:
+        rep.add(f"nfft s={s} accuracy", float(np.mean(acc_nfft[s])), "frac",
+                worst=f"{min(acc_nfft[s]):.3f}")
+        rep.add(f"nystrom s={s} accuracy", float(np.mean(acc_nys[s])), "frac",
+                worst=f"{min(acc_nys[s]):.3f}")
+    rep.save()
+
+
+if __name__ == "__main__":
+    run()

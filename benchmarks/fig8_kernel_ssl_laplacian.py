@@ -1,0 +1,25 @@
+"""Figure 8 — kernel SSL with the Laplacian RBF kernel (non-Gaussian).
+
+Same protocol as Figure 7; demonstrates the NFFT fast summation's kernel
+flexibility (Section 3: any K well-approximated by a trigonometric
+polynomial works — the Laplacian RBF needs the two-point-Taylor boundary
+regularization since it has a kink at 0 handled by p-smoothing).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Reporter
+from benchmarks.fig7_kernel_ssl import run_kernel
+from repro.core import FastsumParams
+
+
+def run(report: Reporter | None = None) -> None:
+    rep = report or Reporter("fig8_kernel_ssl_laplacian")
+    run_kernel(rep, "laplacian_rbf", 0.4,
+               FastsumParams(n_bandwidth=128, m=4, p=4, eps_b=None),
+               "laplacian-rbf")
+    rep.save()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Matvec scaling — the paper's core O(n) claim (supports Fig. 3d).
+
+Times one W̃x product: NFFT fast summation (setups #1-#3) vs the O(n^2)
+tiled direct matvec vs the Pallas streaming kernel-matvec (interpret mode on
+CPU), over growing n.  Reports seconds and the empirical scaling exponent
+log(t_2n / t_n) / log 2 — the NFFT column should sit near 1, direct near 2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Reporter, quick, timeit
+from repro.core import (
+    SETUP_1, SETUP_2, SETUP_3, direct_matvec_tiled, make_fastsum, make_kernel,
+)
+from repro.data.synthetic import spiral
+
+SIGMA = 3.5
+
+
+def run(report: Reporter | None = None) -> None:
+    rep = report or Reporter("matvec_scaling")
+    sizes = [2000, 8000, 32000] if quick() else [2000, 5000, 10000, 20000,
+                                                 50000, 100000]
+    kernel = make_kernel("gaussian", sigma=SIGMA)
+    times: dict[str, list] = {}
+    for n in sizes:
+        points, _ = spiral(n, seed=2)
+        pts = jnp.asarray(points)
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+
+        for name, setup in (("setup1", SETUP_1), ("setup2", SETUP_2),
+                            ("setup3", SETUP_3)):
+            op = make_fastsum(kernel, pts, setup)
+            mv = jax.jit(op.matvec)
+            t, _ = timeit(lambda: mv(x))
+            times.setdefault(f"nfft-{name}", []).append(t)
+            rep.add(f"nfft-{name} n={n}", t, "s")
+
+        t, _ = timeit(lambda: direct_matvec_tiled(kernel, pts, x, tile=1024),
+                      repeats=1)
+        times.setdefault("direct", []).append(t)
+        rep.add(f"direct n={n}", t, "s")
+
+    for name, ts in times.items():
+        if len(ts) >= 2:
+            expo = float(np.polyfit(np.log(sizes[:len(ts)]), np.log(ts), 1)[0])
+            rep.add(f"{name} scaling-exponent", expo, "log-slope")
+    rep.save()
+
+
+if __name__ == "__main__":
+    run()

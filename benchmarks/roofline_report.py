@@ -1,0 +1,110 @@
+"""Roofline report — renders the dry-run JSON into the EXPERIMENTS.md tables.
+
+Reads experiments/dryrun/dryrun_<tag>.json (produced by
+``python -m repro.launch.dryrun``) and emits:
+  * per-(arch x shape x mesh) table of the three roofline terms, dominant
+    bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, per-device memory;
+  * a skipped-cells table with reasons;
+  * markdown to stdout / file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    for unit, scale in (("s", 1.0), ("ms", 1e-3), ("us", 1e-6)):
+        if x >= scale:
+            return f"{x / scale:.2f}{unit}"
+    return f"{x:.1e}s"
+
+
+def fmt_b(x: float) -> str:
+    for unit, scale in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= scale:
+            return f"{x / scale:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def render(records: list, *, include_graph: bool = True) -> str:
+    lines = []
+    lines.append("| arch | shape | mesh | kind | compute | memory | "
+                 "collective | dominant | useful/HLO | HBM/dev | DCI |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in records:
+        if r["status"] != "ok":
+            continue
+        if r["kind"] == "graph_matvec" and not include_graph:
+            continue
+        roof = r["roofline"]
+        mem = r.get("memory", {})
+        hbm = mem.get("temp_size_in_bytes", 0) + mem.get(
+            "argument_size_in_bytes", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} "
+            f"| {fmt_s(roof['compute_s'])} | {fmt_s(roof['memory_s'])} "
+            f"| {fmt_s(roof['collective_s'])} | **{roof['dominant']}** "
+            f"| {roof['useful_flop_ratio']:.3f} | {fmt_b(hbm)} "
+            f"| {fmt_b(roof['dci_bytes'])} |")
+    skipped = [r for r in records if r["status"] == "skipped"]
+    if skipped:
+        lines.append("")
+        lines.append("Skipped cells (per assignment rules):")
+        lines.append("")
+        lines.append("| arch | shape | mesh | reason |")
+        lines.append("|---|---|---|---|")
+        for r in skipped:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| {r['reason'][:90]} |")
+    errors = [r for r in records if r["status"] == "error"]
+    if errors:
+        lines.append("")
+        lines.append(f"ERRORS: {len(errors)} cells failed")
+        for r in errors:
+            lines.append(f"  - {r['arch']} x {r['shape']} @ {r['mesh']}: "
+                         f"{r['error'][:140]}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="experiments/dryrun/dryrun_baseline.json")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    with open(args.json) as f:
+        records = json.load(f)
+    md = render(records)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md + "\n")
+    print(md)
+
+
+def run(report=None) -> None:
+    """Bench-runner entry: render the most recent dry-run table."""
+    path = None
+    for tag in ("final", "baseline"):
+        cand = f"experiments/dryrun/dryrun_{tag}.json"
+        if os.path.exists(cand):
+            path = cand
+            break
+    if path is None:
+        print("roofline_report: no dry-run JSON yet — run "
+              "`python -m repro.launch.dryrun` first")
+        return
+    with open(path) as f:
+        records = json.load(f)
+    ok = sum(r["status"] == "ok" for r in records)
+    err = sum(r["status"] == "error" for r in records)
+    print(f"roofline_report [{path}]: {ok} ok cells, {err} errors "
+          f"(full table in EXPERIMENTS.md)")
+    print(render(records, include_graph=True)[:4000])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--full]``
+
+Default sizes are CPU-scaled (quick mode); set REPRO_BENCH_FULL=1 or --full
+for the paper-scale protocol (hours).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig3", "benchmarks.fig3_eigenvalues",
+     "Fig 3: eigenvalue accuracy + runtime (NFFT-Lanczos / Nyström / hybrid)"),
+    ("fig5", "benchmarks.fig5_segmentation",
+     "Fig 5: image segmentation via spectral clustering"),
+    ("fig6", "benchmarks.fig6_phasefield",
+     "Fig 6: Allen-Cahn phase-field SSL accuracy"),
+    ("fig7", "benchmarks.fig7_kernel_ssl",
+     "Fig 7: kernel SSL misclassification (Gaussian)"),
+    ("fig8", "benchmarks.fig8_kernel_ssl_laplacian",
+     "Fig 8: kernel SSL misclassification (Laplacian RBF)"),
+    ("fig9", "benchmarks.fig9_krr",
+     "Fig 9: kernel ridge regression decision boundaries"),
+    ("scaling", "benchmarks.matvec_scaling",
+     "Fig 3d core claim: O(n) NFFT matvec vs O(n^2) direct"),
+    ("roofline", "benchmarks.roofline_report",
+     "Roofline tables from the multi-pod dry-run"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of keys: fig3,fig5,...,scaling,roofline")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow)")
+    args = ap.parse_args()
+    if args.full:
+        os.environ["REPRO_BENCH_FULL"] = "1"
+
+    keys = args.only.split(",") if args.only else [k for k, _, _ in MODULES]
+    failures = []
+    for key, module, desc in MODULES:
+        if key not in keys:
+            continue
+        print(f"\n=== {key}: {desc} ===", flush=True)
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+            print(f"--- {key} done in {time.perf_counter() - t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            failures.append(key)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        sys.exit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end driver — image segmentation via NFFT spectral clustering
+(paper Section 6.2.1, the paper's flagship application).
+
+Every pixel is a graph node with its RGB vector; the dense
+(H*W) x (H*W) graph Laplacian is never formed — eigenvectors come from the
+NFFT-based Lanczos method with the paper's parameters (N=16, m=2, p=2,
+eps_B=1/8, sigma=90).  Writes PPM images of the input and the k=2 / k=4
+segmentations.
+
+    PYTHONPATH=src python examples/image_segmentation.py --height 100 --width 150
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FastsumParams, make_kernel, make_normalized_adjacency
+from repro.data.synthetic import synthetic_image
+from repro.graph.spectral import spectral_clustering
+
+PALETTE = np.asarray([
+    (230, 60, 60), (60, 160, 230), (240, 200, 60), (110, 200, 110),
+    (180, 110, 220), (240, 140, 60)], np.uint8)
+
+
+def write_ppm(path: str, img: np.ndarray) -> None:
+    h, w, _ = img.shape
+    with open(path, "wb") as f:
+        f.write(f"P6 {w} {h} 255\n".encode())
+        f.write(img.astype(np.uint8).tobytes())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--height", type=int, default=100)
+    ap.add_argument("--width", type=int, default=150)
+    ap.add_argument("--sigma", type=float, default=90.0)
+    ap.add_argument("--out", default="experiments/segmentation")
+    args = ap.parse_args()
+
+    img, truth = synthetic_image(args.height, args.width)
+    n = args.height * args.width
+    pixels = jnp.asarray(img.reshape(-1, 3))
+    print(f"image {args.height}x{args.width} -> fully connected graph with "
+          f"n={n} nodes (dense W would be {n * n * 8 / 1e9:.1f} GB)")
+
+    kernel = make_kernel("gaussian", sigma=args.sigma)
+    params = FastsumParams(n_bandwidth=16, m=2, p=2, eps_b=1.0 / 8.0)
+
+    os.makedirs(args.out, exist_ok=True)
+    write_ppm(os.path.join(args.out, "input.ppm"), img)
+
+    t0 = time.perf_counter()
+    op = make_normalized_adjacency(kernel, pixels, params)
+    print(f"operator setup (incl. degrees by fast summation): "
+          f"{time.perf_counter() - t0:.2f}s")
+
+    for k in (2, 4):
+        t0 = time.perf_counter()
+        res = spectral_clustering(op, k, key=jax.random.PRNGKey(0))
+        dt = time.perf_counter() - t0
+        seg = PALETTE[np.asarray(res.assignments) % len(PALETTE)]
+        path = os.path.join(args.out, f"segmentation_k{k}.ppm")
+        write_ppm(path, seg.reshape(args.height, args.width, 3))
+        print(f"k={k}: clustered in {dt:.2f}s -> {path}")
+        print(f"   eigenvalues: {np.asarray(res.eigenvalues)}")
+
+
+if __name__ == "__main__":
+    main()

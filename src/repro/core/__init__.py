@@ -1,0 +1,26 @@
+"""Core paper contribution: NFFT fast summation + Krylov methods.
+
+Public API re-exports.
+"""
+
+from repro.core.kernels import (  # noqa: F401
+    Kernel, make_kernel, GAUSSIAN, LAPLACIAN_RBF, MULTIQUADRIC,
+    INVERSE_MULTIQUADRIC, ALL_KERNELS,
+)
+from repro.core.fastsum import (  # noqa: F401
+    FastsumParams, FastsumOperator, NormalizedAdjacencyOperator,
+    make_fastsum, make_normalized_adjacency,
+    SETUP_1, SETUP_2, SETUP_3,
+    dense_weight_matrix, dense_normalized_adjacency, direct_matvec_tiled,
+)
+from repro.core.nfft import (  # noqa: F401
+    NfftPlan, NfftGeometry, build_geometry, nfft_forward, nfft_adjoint,
+)
+from repro.core.lanczos import (  # noqa: F401
+    lanczos, eigsh, eigsh_smallest_laplacian, EigshResult,
+)
+from repro.core.solvers import cg, minres, SolveResult  # noqa: F401
+from repro.core.nystrom import (  # noqa: F401
+    nystrom_traditional, nystrom_gaussian_nfft, NystromResult,
+)
+from repro.core.error import lemma31_bound, aposteriori_report  # noqa: F401

@@ -1,0 +1,163 @@
+"""Kernel regularization and Fourier coefficients (paper Section 3, Eq. (3.4)).
+
+``K_R`` is the 1-periodic smooth continuation of the kernel:
+
+    K_R(y) = K(y)            if ||y|| <= 1/2 - eps_B
+           = T_B(||y||)      if 1/2 - eps_B < ||y|| <= 1/2
+           = T_B(1/2)        otherwise (cube corners),
+
+where ``T_B`` is a two-point Taylor (Hermite) transition polynomial.  We use
+the unique polynomial of degree ``2p-2`` satisfying
+
+    T_B^(j)(a) = K^(j)(a),  j = 0..p-1,   a = 1/2 - eps_B,
+    T_B^(j)(b) = 0,         j = 1..p-1,   b = 1/2,
+
+(the boundary *value* ``T_B(b)`` is left free and falls out of the solve; all
+first ``p-1`` derivatives vanish at the boundary so the radial profile
+continues smoothly into the constant corner region and across the periodic
+boundary).  This differs from NFFT3's degree-``2p-1`` variant; both satisfy
+the paper's smoothness requirement (``K_R`` is ``p-1`` times continuously
+differentiable as a periodic function) — see DESIGN.md §8.
+
+The Fourier coefficients of the trigonometric approximant ``K_RF`` are the
+trapezoidal-rule/DFT approximation (Eq. (3.4)):
+
+    b_hat[l] = (1/N^d) * sum_{j in I_N^d} K_R(j/N) e^{-2 pi i j.l / N}.
+
+All coefficient arrays are kept in **FFT order** (numpy ``fftfreq``
+convention) throughout the code base; no fftshift is ever applied.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels import Kernel
+
+
+def kernel_radial_derivatives(kernel: Kernel, r0: float, order: int) -> np.ndarray:
+    """Values ``[K(r0), K'(r0), ..., K^(order-1)(r0)]`` via nested jax.grad.
+
+    Evaluated in float64 at setup time (tiny cost, executed once per plan).
+    """
+    derivs = []
+    f = lambda r: kernel.phi(r)
+    g = f
+    for _ in range(order):
+        derivs.append(float(jax.jit(g)(jnp.float64(r0))))
+        g = jax.grad(g)
+    return np.asarray(derivs, dtype=np.float64)
+
+
+def two_point_taylor(kernel: Kernel, p: int, eps_b: float) -> np.ndarray:
+    """Coefficients (ascending, in t=(r-a)/(b-a)) of the transition poly T_B.
+
+    Returns ``coeffs`` such that ``T_B(r) = sum_k coeffs[k] * t**k`` with
+    ``t = (r - a)/(b - a)``, ``a = 1/2 - eps_B``, ``b = 1/2``.
+    """
+    assert p >= 1
+    a = 0.5 - eps_b
+    h = eps_b  # b - a
+    n_coef = 2 * p - 1  # degree 2p-2
+    A = np.zeros((n_coef, n_coef))
+    rhs = np.zeros(n_coef)
+
+    # Conditions at t=0 (r=a): T^(j)(a) = K^(j)(a) * h^j (chain rule in t).
+    kd = kernel_radial_derivatives(kernel, a, p)
+    for j in range(p):
+        # d^j/dt^j of t^k at t=0 is j! * [k == j]
+        A[j, j] = float(_fact(j))
+        rhs[j] = kd[j] * (h ** j)
+
+    # Conditions at t=1 (r=b): T^(j)(b) = 0 for j=1..p-1.
+    for idx, j in enumerate(range(1, p)):
+        row = p + idx
+        for k in range(j, n_coef):
+            A[row, k] = _falling(k, j)
+        rhs[row] = 0.0
+
+    coeffs = np.linalg.solve(A, rhs)
+    return coeffs
+
+
+def _fact(j: int) -> int:
+    out = 1
+    for i in range(2, j + 1):
+        out *= i
+    return out
+
+
+def _falling(k: int, j: int) -> float:
+    out = 1.0
+    for i in range(j):
+        out *= (k - i)
+    return out
+
+
+def regularized_kernel_profile(kernel: Kernel, p: int, eps_b: float):
+    """Returns a vectorized radial profile ``K_R(r)`` (JAX traceable).
+
+    With ``eps_B == 0`` no transition is applied (``K_R = K`` inside the ball,
+    constant ``K(1/2)`` outside) — the paper's setups #1–#3 use eps_B = 0.
+    """
+    a = 0.5 - eps_b
+    if eps_b <= 0.0:
+        edge = kernel.phi(jnp.float64(0.5))
+
+        def profile(r):
+            r = jnp.asarray(r)
+            return jnp.where(r <= 0.5, kernel.phi(jnp.minimum(r, 0.5)), edge)
+
+        return profile
+
+    coeffs = jnp.asarray(two_point_taylor(kernel, p, eps_b))
+
+    def t_poly(r):
+        t = (r - a) / eps_b
+        return jnp.polyval(coeffs[::-1], t)
+
+    edge_val = t_poly(jnp.float64(0.5))
+
+    def profile(r):
+        r = jnp.asarray(r)
+        inner = kernel.phi(jnp.minimum(r, a))
+        trans = t_poly(jnp.clip(r, a, 0.5))
+        return jnp.where(r <= a, inner, jnp.where(r <= 0.5, trans, edge_val))
+
+    return profile
+
+
+def kernel_fourier_coefficients(
+    kernel: Kernel, d: int, n_bandwidth: int, p: int, eps_b: float
+) -> jnp.ndarray:
+    """Fourier coefficients ``b_hat`` of K_RF on the full I_N^d grid (Eq. 3.4).
+
+    Returns a complex array of shape ``(N,)*d`` in FFT order.  For the paper's
+    real even kernels the imaginary part is ~machine-eps; it is kept so that
+    the fastsum operator stays exactly linear/Hermitian.
+    """
+    n = n_bandwidth
+    profile = regularized_kernel_profile(kernel, p, eps_b)
+    # Sample positions j/N for j in I_N = {-N/2, ..., N/2-1}, in FFT order.
+    freqs = jnp.fft.fftfreq(n, d=1.0 / n)  # [0, 1, ..., N/2-1, -N/2, ..., -1]
+    coords = freqs / n  # j/N in FFT order
+    grids = jnp.meshgrid(*([coords] * d), indexing="ij")
+    radius = jnp.sqrt(sum(g * g for g in grids))
+    samples = profile(radius)
+    return jnp.fft.fftn(samples) / (n ** d)
+
+
+def trigonometric_eval(b_hat: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Direct evaluation of ``K_RF(y) = sum_l b_hat[l] e^{2 pi i l.y}``.
+
+    Reference/oracle only — O(N^d) per point.  ``y``: (..., d).
+    """
+    d = b_hat.ndim
+    n = b_hat.shape[0]
+    freqs = jnp.fft.fftfreq(n, d=1.0 / n)  # integer frequencies, FFT order
+    grids = jnp.meshgrid(*([freqs] * d), indexing="ij")
+    l = jnp.stack([g.reshape(-1) for g in grids], axis=-1)  # (N^d, d)
+    phase = 2j * jnp.pi * jnp.einsum("...d,ld->...l", y, l)
+    return jnp.einsum("l,...l->...", b_hat.reshape(-1), jnp.exp(phase))

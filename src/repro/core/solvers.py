@@ -1,0 +1,125 @@
+"""Krylov linear solvers driven by fast matvecs (paper Sections 4, 6.2.3, 6.3).
+
+Conjugate Gradients (Hestenes–Stiefel) and MINRES (Paige–Saunders), both
+matrix-free and jit-compatible (``lax.while_loop``).  Used for
+
+    (I + beta L_s) u = f        (kernel SSL, Eq. 6.4)
+    (K + beta I) alpha = f      (kernel ridge regression, Section 6.3)
+
+with the matvec supplied by Algorithm 3.1/3.2 operators.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Matvec = Callable[[Array], Array]
+
+
+class SolveResult(NamedTuple):
+    x: Array
+    num_iters: Array
+    residual_norm: Array
+    converged: Array
+
+
+def cg(matvec: Matvec, b: Array, *, x0: Array | None = None,
+       tol: float = 1e-8, maxiter: int = 1000,
+       preconditioner: Matvec | None = None) -> SolveResult:
+    """Preconditioned conjugate gradients for SPD operators."""
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - matvec(x)
+    z = preconditioner(r) if preconditioner is not None else r
+    p = z
+    rz = jnp.vdot(r, z).real
+    b_norm = jnp.linalg.norm(b)
+    tol_abs = tol * jnp.maximum(b_norm, 1.0)
+
+    def cond(state):
+        x, r, z, p, rz, i = state
+        return jnp.logical_and(i < maxiter, jnp.linalg.norm(r) > tol_abs)
+
+    def body(state):
+        x, r, z, p, rz, i = state
+        ap = matvec(p)
+        denom = jnp.vdot(p, ap).real
+        alpha = rz / jnp.where(denom != 0, denom, 1.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z_new = preconditioner(r) if preconditioner is not None else r
+        rz_new = jnp.vdot(r, z_new).real
+        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
+        p = z_new + beta * p
+        return x, r, z_new, p, rz_new, i + 1
+
+    x, r, z, p, rz, iters = jax.lax.while_loop(
+        cond, body, (x, r, z, p, rz, jnp.zeros((), jnp.int32)))
+    res = jnp.linalg.norm(r)
+    return SolveResult(x=x, num_iters=iters, residual_norm=res,
+                       converged=res <= tol_abs)
+
+
+def minres(matvec: Matvec, b: Array, *, x0: Array | None = None,
+           tol: float = 1e-8, maxiter: int = 1000) -> SolveResult:
+    """MINRES for symmetric (possibly indefinite) operators."""
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - matvec(x)
+    beta1 = jnp.linalg.norm(r)
+    b_norm = jnp.maximum(jnp.linalg.norm(b), 1.0)
+    tol_abs = tol * b_norm
+    dtype = b.dtype
+    eps = jnp.finfo(dtype).tiny
+
+    # Lanczos + Givens QR recurrences (standard MINRES state machine)
+    v = r / jnp.maximum(beta1, eps)
+    v_prev = jnp.zeros_like(b)
+    w = jnp.zeros_like(b)
+    w_prev = jnp.zeros_like(b)
+    phi_bar = beta1
+    delta1 = jnp.zeros((), dtype)
+    eps_k = jnp.zeros((), dtype)
+    cs = -jnp.ones((), dtype)
+    sn = jnp.zeros((), dtype)
+    beta = beta1
+
+    def cond(state):
+        (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta, i) = state
+        return jnp.logical_and(i < maxiter, jnp.abs(phi_bar) > tol_abs)
+
+    def body(state):
+        (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta, i) = state
+        av = matvec(v)
+        alpha = jnp.vdot(v, av).real.astype(dtype)
+        av = av - alpha * v - beta * v_prev
+        beta_new = jnp.linalg.norm(av)
+        v_new = av / jnp.maximum(beta_new, eps)
+
+        # previous rotation
+        delta2 = cs * delta1 + sn * alpha
+        gamma1 = sn * delta1 - cs * alpha
+        eps_next = sn * beta_new
+        delta1_next = -cs * beta_new
+
+        # new rotation
+        gamma2 = jnp.sqrt(gamma1 * gamma1 + beta_new * beta_new)
+        gamma2 = jnp.maximum(gamma2, eps)
+        cs_new = gamma1 / gamma2
+        sn_new = beta_new / gamma2
+        tau = cs_new * phi_bar
+        phi_bar_new = sn_new * phi_bar
+
+        w_new = (v - delta2 * w - eps_k * w_prev) / gamma2
+        x_new = x + tau * w_new
+        return (x_new, v_new, v, w_new, w, phi_bar_new, delta1_next,
+                eps_next, cs_new, sn_new, beta_new, i + 1)
+
+    init = (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta,
+            jnp.zeros((), jnp.int32))
+    (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta, iters) = (
+        jax.lax.while_loop(cond, body, init))
+    return SolveResult(x=x, num_iters=iters, residual_norm=jnp.abs(phi_bar),
+                       converged=jnp.abs(phi_bar) <= tol_abs)

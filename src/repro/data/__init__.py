@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    spiral, crescent_fullmoon, gaussian_blobs, synthetic_image,
+)

@@ -1,0 +1,148 @@
+"""Semi-supervised learning on graphs (paper Sections 6.2.2 and 6.2.3).
+
+1. Phase-field / Allen–Cahn method (Bertozzi–Flenner [5]):
+   convexity-split semi-implicit time stepping of
+
+       u_t = -eps L_s u - (1/eps) psi'(u) + Omega (f - u)
+
+   projected on the k smallest eigenpairs of L_s.  Binary labels +-1; the
+   multiclass driver runs one-vs-rest.
+
+2. Kernel method (Zhou et al. [48]):  solve  (I + beta L_s) u = f  by CG with
+   NFFT matvecs (Eq. (6.4)), or with a truncated eigenapproximation
+   V_k diag(1-lam_k) V_k^T of A for O(nk) solves.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fastsum import NormalizedAdjacencyOperator
+from repro.core.lanczos import eigsh
+from repro.core.solvers import cg
+
+Array = jax.Array
+
+
+def make_training_vector(labels: Array, n_samples_per_class: int, n_classes: int,
+                         *, key: Array, positive_class: int) -> tuple[Array, Array]:
+    """Binary training vector f (+1 for positive class samples, -1 for other
+    class samples, 0 elsewhere) and the sample mask (paper Section 6.2.2)."""
+    n = labels.shape[0]
+    f = jnp.zeros((n,))
+    mask = jnp.zeros((n,), bool)
+    keys = jax.random.split(key, n_classes)
+    for c in range(n_classes):
+        idx = jnp.where(labels == c, jax.random.uniform(keys[c], (n,)), 2.0)
+        chosen = jnp.argsort(idx)[:n_samples_per_class]
+        sign = jnp.where(c == positive_class, 1.0, -1.0)
+        f = f.at[chosen].set(sign)
+        mask = mask.at[chosen].set(True)
+    return f, mask
+
+
+class PhaseFieldResult(NamedTuple):
+    u: Array
+    num_steps: int
+
+
+def allen_cahn_ssl(eigenvalues_ls: Array, eigenvectors: Array, f: Array,
+                   *, eps: float = 10.0, tau: float = 0.1,
+                   omega0: float = 10_000.0, c: float | None = None,
+                   max_steps: int = 500, rtol: float = 1e-10) -> PhaseFieldResult:
+    """Allen–Cahn SSL in the truncated eigenbasis (Section 6.2.2).
+
+    ``eigenvalues_ls``: k smallest eigenvalues of L_s; ``eigenvectors``:
+    corresponding (n, k) eigenvectors; ``f``: training vector (+-1 / 0).
+    """
+    if c is None:
+        c = 2.0 / eps + omega0
+    v = eigenvectors  # (n, k)
+    lam = eigenvalues_ls  # (k,)
+    omega = (f != 0).astype(f.dtype) * omega0
+
+    denom = 1.0 + tau * (eps * lam + c)  # (k,)
+
+    u0 = f
+    a0 = v.T @ u0
+
+    def step(carry):
+        a_bar, u_bar, i, _ = carry
+        psi_prime = 4.0 * u_bar * (u_bar * u_bar - 1.0)
+        # Discrete convexity-split form (paper Section 6.2.2):
+        # (1 + tau(eps lam + c)) a = a_bar + tau(-(1/eps) v^T psi'(u_bar)
+        #                                        + c a_bar + v^T Omega (f-u_bar))
+        rhs = (a_bar
+               + tau * (-(1.0 / eps) * (v.T @ psi_prime)
+                        + c * a_bar
+                        + v.T @ (omega * (f - u_bar))))
+        a_new = rhs / denom
+        u_new = v @ a_new
+        rel = jnp.sum((u_new - u_bar) ** 2) / jnp.maximum(jnp.sum(u_bar ** 2), 1e-30)
+        return a_new, u_new, i + 1, rel
+
+    def cond(carry):
+        _, _, i, rel = carry
+        return jnp.logical_and(i < max_steps, rel > rtol)
+
+    a, u, steps, _ = jax.lax.while_loop(
+        cond, step, (a0, u0, jnp.zeros((), jnp.int32), jnp.ones(())))
+    return PhaseFieldResult(u=u, num_steps=int(steps))
+
+
+def allen_cahn_multiclass(adjacency: NormalizedAdjacencyOperator, labels: Array,
+                          n_classes: int, n_samples_per_class: int, *,
+                          k: int = 5, key: Array,
+                          num_lanczos_iters: int | None = None,
+                          eigsh_fn: Callable | None = None,
+                          **ac_kwargs) -> Array:
+    """One-vs-rest Allen–Cahn classification.  Returns predicted labels."""
+    res = (eigsh_fn or (lambda: eigsh(
+        adjacency.matvec, adjacency.n, k, num_iters=num_lanczos_iters,
+        key=key, dtype=adjacency.inv_sqrt_deg.dtype)))()
+    lam_ls = 1.0 - res.eigenvalues  # smallest of L_s
+    scores = []
+    for cls in range(n_classes):
+        f, _ = make_training_vector(labels, n_samples_per_class, n_classes,
+                                    key=jax.random.fold_in(key, cls),
+                                    positive_class=cls)
+        out = allen_cahn_ssl(lam_ls, res.eigenvectors, f, **ac_kwargs)
+        scores.append(out.u)
+    return jnp.argmax(jnp.stack(scores, axis=1), axis=1)
+
+
+class KernelSSLResult(NamedTuple):
+    u: Array
+    num_iters: Array
+    converged: Array
+
+
+def kernel_ssl_cg(adjacency: NormalizedAdjacencyOperator, f: Array, beta: float,
+                  *, tol: float = 1e-4, maxiter: int = 1000) -> KernelSSLResult:
+    """Solve (I + beta L_s) u = f with CG + NFFT matvecs (Eq. (6.4))."""
+
+    def matvec(x):
+        return x + beta * adjacency.laplacian_matvec(x)
+
+    sol = cg(matvec, f, tol=tol, maxiter=maxiter)
+    return KernelSSLResult(u=sol.x, num_iters=sol.num_iters,
+                           converged=sol.converged)
+
+
+def kernel_ssl_eig(eigenvalues_a: Array, eigenvectors: Array, f: Array,
+                   beta: float) -> Array:
+    """Same solve via truncated eigenapproximation of A (Section 6.2.3).
+
+    With A ≈ V diag(theta) V^T:  L_s ≈ I - V diag(theta) V^T, and by
+    Sherman–Morrison–Woodbury
+        (I + beta L_s)^{-1} = ((1+beta) I - beta V diag(theta) V^T)^{-1}
+      = (1/(1+beta)) [ I + V diag( beta theta / (1+beta-beta theta) ) V^T ].
+    """
+    theta = eigenvalues_a
+    coeff = beta * theta / (1.0 + beta - beta * theta)
+    vtf = eigenvectors.T @ f
+    return (f + eigenvectors @ (coeff * vtf)) / (1.0 + beta)

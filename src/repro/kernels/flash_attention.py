@@ -1,0 +1,137 @@
+"""Flash attention (forward) — Pallas TPU kernel.
+
+Single-pass online-softmax attention over KV tiles: for each (batch*head,
+q-tile) the kernel iterates KV tiles (innermost grid dim), maintaining the
+running max ``m``, normalizer ``l`` and accumulator in VMEM scratch.  GQA is
+handled in the BlockSpec index maps (q-head h reads kv-head h // group), so
+K/V are never materialized per-q-head.
+
+Causal masking skips fully-masked KV tiles via the grid (no wasted tiles) and
+applies the triangular mask on the diagonal tile only.
+
+Used by the LM framework's attention layer when ``use_pallas=True`` (real
+TPU); the dry-run / CPU path uses the XLA einsum reference
+(repro.kernels.ref.flash_attention_ref) — Mosaic kernels do not lower on the
+CPU backend except in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  seq_q: int, seq_k: int, num_k_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]  # (bq, dh)
+    k = k_ref[0]  # (bk, dh)
+    v = v_ref[0]  # (bk, dh)
+
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_ids = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_ids = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = (q_ids < seq_q) & (k_ids < seq_k)
+    if causal:
+        # decode-style alignment: query t attends keys <= t + (seq_k - seq_q)
+        mask &= q_ids + (seq_k - seq_q) >= k_ids
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]  # (bq, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        norm = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / norm).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = False,
+                    scale: float | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> Array:
+    """Flash attention forward.  q: (b, hq, sq, dh); k, v: (b, hkv, sk, dh)."""
+    b, hq, sq, dh = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(8, sk))
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    # flatten (batch, q-head) into one grid axis
+    qf = qp.reshape(b * hq, qp.shape[2], dh)
+    kf = kp.reshape(b * hkv, kp.shape[2], dh)
+    vf = vp.reshape(b * hkv, vp.shape[2], dh)
+
+    num_q_blocks = qp.shape[2] // bq
+    num_k_blocks = kp.shape[2] // bk
+    grid = (b * hq, num_q_blocks, num_k_blocks)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=float(scale), causal=causal, block_q=bq,
+            block_k=bk, seq_q=sq, seq_k=sk, num_k_blocks=num_k_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bk, dh),
+                         lambda h, qi, ki, g=group: (h // g, ki, 0)),
+            pl.BlockSpec((1, bk, dh),
+                         lambda h, qi, ki, g=group: (h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qf.shape, q.dtype),
+        scratch_shapes=[
+            # running max / normalizer / accumulator, resident in VMEM
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    out = out.reshape(b, hq, qp.shape[2], dh)[:, :, :sq]
+    return out

@@ -1,0 +1,62 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on non-TPU backends so the same call sites work
+on CPU (kernel body executed in Python) and TPU (Mosaic lowering).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import kernel_matvec as _km
+from repro.kernels import nfft_window as _nw
+
+Array = jax.Array
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def kernel_matvec(points_out: Array, points_in: Array, x: Array, *,
+                  kernel_name: str = "gaussian", param: float = 1.0,
+                  zero_diagonal: bool = True, tile_j: int | None = None,
+                  tile_i: int | None = None,
+                  interpret: bool | None = None) -> Array:
+    kw = {}
+    if tile_j is not None:
+        kw["tile_j"] = tile_j
+    if tile_i is not None:
+        kw["tile_i"] = tile_i
+    return _km.kernel_matvec(
+        points_out, points_in, x, kernel_name=kernel_name, param=param,
+        zero_diagonal=zero_diagonal,
+        interpret=_default_interpret() if interpret is None else interpret,
+        **kw)
+
+
+def window_gather(grid: Array, indices: Array, weights: Array, *,
+                  interpret: bool | None = None, **kw) -> Array:
+    return _nw.window_gather(
+        grid, indices, weights,
+        interpret=_default_interpret() if interpret is None else interpret,
+        **kw)
+
+
+def window_spread(x: Array, indices: Array, weights: Array, *, grid_size: int,
+                  interpret: bool | None = None, **kw) -> Array:
+    return _nw.window_spread(
+        x, indices, weights, grid_size=grid_size,
+        interpret=_default_interpret() if interpret is None else interpret,
+        **kw)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = False,
+                    scale: float | None = None,
+                    interpret: bool | None = None, **kw) -> Array:
+    return _fa.flash_attention(
+        q, k, v, causal=causal, scale=scale,
+        interpret=_default_interpret() if interpret is None else interpret,
+        **kw)

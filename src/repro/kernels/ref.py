@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth that the corresponding Pallas
+kernel must match (asserted across shape/dtype sweeps in
+tests/test_kernels_pallas.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def kernel_matvec_ref(points_out: Array, points_in: Array, x: Array,
+                      kernel_name: str, param: float,
+                      zero_diagonal: bool = True) -> Array:
+    """y_j = sum_i K(||p_out_j - p_in_i||) x_i, optional zero diagonal.
+
+    points_out: (n_out, d), points_in: (n_in, d), x: (n_in,) or (n_in, c).
+    """
+    diff = points_out[:, None, :] - points_in[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)
+    w = kernel_profile_r2(r2, kernel_name, param)
+    if zero_diagonal:
+        i = jnp.arange(points_out.shape[0])[:, None]
+        j = jnp.arange(points_in.shape[0])[None, :]
+        w = jnp.where(i == j, 0.0, w)
+    return w @ x
+
+
+def kernel_profile_r2(r2: Array, kernel_name: str, param: float) -> Array:
+    """Kernel profile evaluated on *squared* radii (all four paper kernels)."""
+    if kernel_name == "gaussian":
+        return jnp.exp(-r2 / (param * param))
+    if kernel_name == "laplacian_rbf":
+        return jnp.exp(-jnp.sqrt(jnp.maximum(r2, 0.0)) / param)
+    if kernel_name == "multiquadric":
+        return jnp.sqrt(r2 + param * param)
+    if kernel_name == "inverse_multiquadric":
+        return 1.0 / jnp.sqrt(r2 + param * param)
+    raise ValueError(kernel_name)
+
+
+def window_gather_ref(grid: Array, indices: Array, weights: Array) -> Array:
+    """f_j = sum_t weights[j,t] * grid[indices[j,t]]  (NFFT gathering).
+
+    grid: (G,) or (G, c); indices/weights: (n, taps).
+    """
+    vals = grid[indices]  # (n, taps) or (n, taps, c)
+    if grid.ndim == 2:
+        return jnp.sum(vals * weights[..., None], axis=1)
+    return jnp.sum(vals * weights, axis=1)
+
+
+def window_spread_ref(x: Array, indices: Array, weights: Array,
+                      grid_size: int) -> Array:
+    """g = sum_j x_j * weights[j, :] scattered at indices[j, :]  (spreading).
+
+    x: (n,) or (n, c); returns (G,) or (G, c).
+    """
+    if x.ndim == 2:
+        vals = weights[..., None] * x[:, None, :]
+        out = jnp.zeros((grid_size, x.shape[1]), dtype=vals.dtype)
+        return out.at[indices.reshape(-1)].add(vals.reshape(-1, x.shape[1]))
+    vals = weights * x[:, None]
+    out = jnp.zeros((grid_size,), dtype=vals.dtype)
+    return out.at[indices.reshape(-1)].add(vals.reshape(-1))
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = False,
+                        scale: float | None = None,
+                        bias: Array | None = None) -> Array:
+    """Reference softmax attention with GQA head-group broadcasting.
+
+    q: (b, hq, sq, dh), k/v: (b, hkv, skv, dh) with hq % hkv == 0.
+    """
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk) * scale
+    if bias is not None:
+        logits = logits + bias
+    if causal:
+        skv = k.shape[2]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :] - (skv - sq)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vv)

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract roofline terms.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+host-device-count flag above is set before any jax import, and jax locks the
+device count at first init.  Nothing here allocates device memory for the
+big configs — inputs are ShapeDtypeStructs and states come from
+``jax.eval_shape``.
+
+Per cell it records: compile wall-time, ``compiled.memory_analysis()``
+(proves the per-chip footprint), ``cost_analysis()`` FLOPs/bytes, the
+collective schedule parsed from the optimized per-device HLO, and the three
+roofline terms (launch/roofline.py).  Results go to JSON for
+EXPERIMENTS.md §Dry-run / §Roofline.
+
+Also includes the *paper-technique* cells (``graph-fastsum-*``): the
+distributed NFFT fast-summation matvec (dist/fastsum_dist.py) lowered on the
+same meshes with node counts up to 2^27, proving the O(n/P)-local +
+O(grid)-allreduce communication pattern shards to 512 chips.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALL_ARCHS, EXTRA_ARCHS, get_config
+from repro.launch import hlo_analysis as hlo_mod
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.steps import lower_cell
+from repro.training.train_loop import TrainConfig
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for name in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(ma, name):
+            out[name] = int(getattr(ma, name))
+    if not out:
+        out["repr"] = repr(ma)
+    return out
+
+
+def _cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and not k.startswith("utilization")}
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, *,
+             microbatch_override: int | None = None,
+             compress_grads: bool = False,
+             hlo_dir: str | None = None) -> dict:
+    cfg = get_config(arch_name)
+    shape = next(s for s in cfg.shapes if s.name == shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    rec = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "chips": chips, "kind": shape.kind,
+    }
+    if shape.skip_reason:
+        rec.update(status="skipped", reason=shape.skip_reason)
+        return rec
+
+    tc = TrainConfig.for_arch(cfg)
+    if microbatch_override:
+        tc = dataclasses.replace(tc, num_microbatches=microbatch_override)
+    if compress_grads:
+        tc = dataclasses.replace(tc, compress_grads=True)
+    try:
+        t0 = time.perf_counter()
+        lowered, kind = lower_cell(cfg, shape, mesh, tc=tc)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+        mem = _memory_analysis_dict(compiled)
+        cost = _cost_analysis_dict(compiled)
+        hlo = compiled.as_text()
+        if hlo_dir:
+            os.makedirs(hlo_dir, exist_ok=True)
+            fn = f"{arch_name}__{shape_name}__{rec['mesh']}.hlo"
+            with open(os.path.join(hlo_dir, fn), "w") as f:
+                f.write(hlo)
+        stats = hlo_mod.analyze(hlo, pod_boundary=256)
+        roof = rl.roofline_from_stats(
+            stats, kind=kind,
+            active_params=float(cfg.active_param_count()),
+            batch=shape.global_batch, seq=shape.seq_len, chips=chips)
+        rec.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            memory=mem, cost_analysis_raw=cost,
+            hlo_stats=stats.to_json(),
+            roofline=roof.to_json(),
+            params=int(cfg.param_count()),
+            active_params=int(cfg.active_param_count()),
+            num_microbatches=tc.num_microbatches,
+        )
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Paper-technique cells: distributed fastsum matvec
+# ---------------------------------------------------------------------------
+
+def run_graph_cell(n_nodes: int, d: int, multi_pod: bool, *,
+                   setup_name: str = "setup2") -> dict:
+    """Lower the distributed Algorithm 3.1 matvec at cluster scale."""
+    from repro.core.fastsum import SETUP_1, SETUP_2, SETUP_3
+    from repro.core.nfft import NfftGeometry, NfftPlan
+    from repro.dist.fastsum_dist import _spectral_matvec_local
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    import functools
+
+    params = {"setup1": SETUP_1, "setup2": SETUP_2, "setup3": SETUP_3}[setup_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    plan = params.nfft_plan(d)
+    taps = plan.taps ** d
+    rec = {
+        "arch": f"graph-fastsum-{setup_name}-d{d}",
+        "shape": f"n{n_nodes}", "mesh": "x".join(map(str, mesh.shape.values())),
+        "chips": chips, "kind": "graph_matvec",
+    }
+    try:
+        b_hat = jax.ShapeDtypeStruct((plan.n_bandwidth,) * d, jnp.complex64)
+        indices = jax.ShapeDtypeStruct((n_nodes, taps), jnp.int32)
+        weights = jax.ShapeDtypeStruct((n_nodes, taps), jnp.float32)
+        x = jax.ShapeDtypeStruct((n_nodes,), jnp.float32)
+
+        @functools.partial(shard_map, mesh=mesh,
+                           in_specs=(P(), P(axes, None), P(axes, None),
+                                     P(axes)),
+                           out_specs=P(axes), check_vma=False)
+        def matvec(b_hat_, idx_, w_, x_):
+            g = NfftGeometry(indices=idx_, weights=w_)
+            return _spectral_matvec_local(plan, b_hat_, g, x_, axes)
+
+        from repro.dist.sharding import named
+        in_sh = (named(mesh, P()), named(mesh, P(axes, None)),
+                 named(mesh, P(axes, None)), named(mesh, P(axes)))
+        t0 = time.perf_counter()
+        lowered = jax.jit(
+            matvec, in_shardings=in_sh, out_shardings=named(mesh, P(axes))
+        ).lower(b_hat, indices, weights, x)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+        cost = _cost_analysis_dict(compiled)
+        stats = hlo_mod.analyze(compiled.as_text(), pod_boundary=256)
+        # useful work model: direct dense matvec is 2 n^2 (d+2) flops; the
+        # fastsum does O(n) — report the dense-equivalent ratio instead.
+        roof = rl.roofline_from_stats(
+            stats, kind="prefill", active_params=float(n_nodes),
+            batch=1, seq=1, chips=chips)
+        rec.update(status="ok", lower_s=round(t1 - t0, 2),
+                   compile_s=round(t2 - t1, 2),
+                   memory=_memory_analysis_dict(compiled),
+                   cost_analysis_raw=cost,
+                   hlo_stats=stats.to_json(), roofline=roof.to_json(),
+                   grid=plan.grid_size, bandwidth=plan.n_bandwidth, d=d)
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch name, comma list, or 'all'")
+    ap.add_argument("--shapes", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--graph", action="store_true",
+                    help="also run the paper-technique fastsum cells")
+    ap.add_argument("--graph-n", type=int, default=2 ** 27)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    if args.arch == "all":
+        archs = [c.name for c in ALL_ARCHS + EXTRA_ARCHS]
+    else:
+        archs = args.arch.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for name in archs:
+        cfg = get_config(name)
+        shape_names = ([s.name for s in cfg.shapes] if args.shapes == "all"
+                       else args.shapes.split(","))
+        for sn in shape_names:
+            if sn not in {s.name for s in cfg.shapes}:
+                continue
+            for mp in meshes:
+                rec = run_cell(name, sn, mp,
+                               microbatch_override=args.microbatches,
+                               compress_grads=args.compress_grads,
+                               hlo_dir=args.hlo_dir)
+                results.append(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" compile={rec['compile_s']}s"
+                             f" dominant={r['dominant']}"
+                             f" compute={r['compute_s']:.3e}s"
+                             f" memory={r['memory_s']:.3e}s"
+                             f" coll={r['collective_s']:.3e}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[{status:7s}] {name} x {sn} @ {rec['mesh']}{extra}",
+                      flush=True)
+
+    if args.graph:
+        for mp in meshes:
+            for setup in ("setup1", "setup2", "setup3"):
+                rec = run_graph_cell(args.graph_n, 3, mp, setup_name=setup)
+                results.append(rec)
+                print(f"[{rec['status']:7s}] {rec['arch']} x {rec['shape']}"
+                      f" @ {rec['mesh']}", flush=True)
+
+    suffix = f"_{args.tag}" if args.tag else ""
+    path = os.path.join(args.out, f"dryrun{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n{n_ok} ok, {n_skip} skipped, {n_err} errors -> {path}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,491 @@
+"""Loop-aware analysis of optimized (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits every ``while`` body
+exactly ONCE — a scan-over-layers model under-reports FLOPs/bytes/collective
+traffic by the trip count (126x for llama3-405b).  This module re-derives
+the per-device roofline quantities with loop multipliers:
+
+  1. split the module into named computations (headers start at column 0
+     and end with '{'; instruction lines are indented 'name = type op(...)'
+     with operands referenced BY NAME — types resolved via a global
+     name->shape table);
+  2. build the call graph (fusion ``calls=``, ``while`` body/condition,
+     ``to_apply=``, conditional ``branch_computations``);
+  3. extract each while loop's trip count from its condition computation
+     (the loop bound is the max integer constant there — exact for
+     lax.scan / fori_loop conditions);
+  4. effective multiplier of a computation = product of trip counts of the
+     enclosing while loops (ENTRY = 1);
+  5. FLOPs: every ``dot``, 2 * prod(result dims) * contraction size
+     (einsum models put essentially all FLOPs in dots), x multiplier;
+  6. memory bytes: resolved operand + result bytes of memory-level ops at
+     the top level of non-fusion computations (fusion internals are
+     on-chip), x multiplier;
+  7. collective bytes: ring model per op kind, x multiplier, split into
+     ICI vs cross-pod DCI traffic by replica-group analysis.
+
+All quantities are per-device: the post-partitioning module is the
+single-device SPMD program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_TYPE_RE = re.compile(
+    r"\b(pred|bf16|f16|f32|f64|c64|c128|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64"
+    r"|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_HDR_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"\b[su](?:8|16|32|64)\[\]\s+constant\((\d+)\)")
+_DOT_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPCODE_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "after-all", "partition-id", "replica-id", "opt-barrier",
+    "while", "call", "conditional", "domain", "get-dimension-size",
+    "add-dependency", "custom-call",  # custom-calls counted separately below
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _token_bytes(dtype: str, dims: str) -> int:
+    return _shape_elems(dims) * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    line: str
+    result_tokens: list  # [(dtype, dims)]
+    operand_names: list
+
+    @property
+    def result_bytes(self) -> int:
+        return sum(_token_bytes(d, s) for d, s in self.result_tokens)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: list
+    multiplier: float = 0.0
+    is_fusion_body: bool = False
+
+
+def _parse_instruction(stripped: str) -> Optional[Instruction]:
+    eq = stripped.find(" = ")
+    if eq < 0:
+        return None
+    lhs = stripped[:eq].strip()
+    if lhs.startswith("ROOT"):
+        lhs = lhs[4:].strip()
+    name = lhs.lstrip("%")
+    rest = stripped[eq + 3:]
+    m = _OPCODE_RE.search(rest)
+    if m is None:
+        return None
+    opcode = m.group(1)
+    # result type tokens live before the opcode
+    result_tokens = [mm.groups() for mm in _TYPE_RE.finditer(rest[:m.start()])]
+    # operand names: inside opcode( ... up to the first ')'
+    args_start = m.end()
+    args_end = rest.find(")", args_start)
+    args = rest[args_start:args_end if args_end > 0 else None]
+    operand_names = _NAME_RE.findall(args)
+    return Instruction(name=name, opcode=opcode, line=stripped,
+                       result_tokens=result_tokens,
+                       operand_names=operand_names)
+
+
+def parse_module(hlo_text: str):
+    """Returns (computations dict incl '__entry__', name->Instruction)."""
+    comps: dict[str, Computation] = {}
+    by_name: dict[str, Instruction] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for raw in hlo_text.splitlines():
+        if not raw:
+            continue
+        if raw[0] not in " \t":  # potential computation header / module line
+            if raw.rstrip().endswith("{"):
+                m = _HDR_NAME_RE.match(raw)
+                if m:
+                    cur = Computation(name=m.group(1), instructions=[])
+                    comps[cur.name] = cur
+                    if raw.startswith("ENTRY"):
+                        entry_name = m.group(1)
+            elif raw.strip() == "}":
+                cur = None
+            continue
+        stripped = raw.strip()
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None or " = " not in stripped:
+            continue
+        ins = _parse_instruction(stripped)
+        if ins is not None:
+            cur.instructions.append(ins)
+            by_name[ins.name] = ins
+    return comps, by_name, entry_name
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = []
+    for ins in cond.instructions:
+        consts += [int(x) for x in _CONST_RE.findall(ins.line)]
+    return max(consts) if consts else 1
+
+
+def assign_multipliers(comps: dict, entry_name) -> None:
+    entry = comps.get(entry_name)
+    if entry is None:  # pragma: no cover
+        for c in comps.values():
+            c.multiplier = 1.0
+        return
+    seen = set()
+
+    def visit(comp: Computation, mult: float):
+        comp.multiplier = max(comp.multiplier, mult)
+        key = (comp.name, mult)
+        if key in seen:
+            return
+        seen.add(key)
+        for ins in comp.instructions:
+            if ins.opcode == "while":
+                mc = _WHILE_COND_RE.search(ins.line)
+                mb = _WHILE_BODY_RE.search(ins.line)
+                cond = comps.get(mc.group(1)) if mc else None
+                body = comps.get(mb.group(1)) if mb else None
+                trips = _trip_count(cond) if cond else 1
+                if body:
+                    visit(body, mult * trips)
+                if cond:
+                    visit(cond, mult * trips)
+            elif ins.opcode == "fusion":
+                m = _CALLS_RE.search(ins.line)
+                if m and m.group(1) in comps:
+                    body = comps[m.group(1)]
+                    body.is_fusion_body = True
+                    visit(body, mult)
+            elif ins.opcode == "conditional":
+                m = _BRANCHES_RE.search(ins.line)
+                if m:
+                    for nm in m.group(1).replace("%", "").split(","):
+                        nm = nm.strip()
+                        if nm in comps:
+                            visit(comps[nm], mult)
+            else:
+                for rx in (_TO_APPLY_RE, _CALLS_RE):
+                    m = rx.search(ins.line)
+                    if m and m.group(1) in comps:
+                        visit(comps[m.group(1)], mult)
+
+    visit(entry, 1.0)
+
+
+def _operand_bytes(ins: Instruction, by_name: dict) -> int:
+    total = 0
+    for nm in ins.operand_names:
+        ref = by_name.get(nm)
+        if ref is not None:
+            total += ref.result_bytes
+    return total
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_traffic(ins: Instruction, comps: dict, by_name: dict) -> int:
+    """HBM traffic of one fusion op, slice-aware.
+
+    Scan-over-layers bodies dynamic-slice the current layer's weights out of
+    the period-stacked arrays: charging the full stacked operand per
+    iteration would over-count by the trip count.  A fusion parameter whose
+    only direct consumers are slice/dynamic-slice/gather ops is charged the
+    sliced bytes; everything else is charged in full.  Symmetrically, a
+    fusion whose root is a dynamic-update-slice writes only the update
+    (XLA aliases the rest in place).
+    """
+    m = _CALLS_RE.search(ins.line)
+    body = comps.get(m.group(1)) if m else None
+    if body is None:
+        return ins.result_bytes + _operand_bytes(ins, by_name)
+
+    # map body parameter name -> (index, full bytes)
+    params: dict[str, int] = {}
+    for bins in body.instructions:
+        if bins.opcode == "parameter":
+            params[bins.name] = bins.result_bytes
+    # direct consumers of each parameter
+    sliced_bytes: dict[str, int] = {}
+    full_use: set = set()
+    root_ins = body.instructions[-1] if body.instructions else None
+    for bins in body.instructions:
+        if bins.opcode == "parameter":
+            continue
+        for nm in bins.operand_names:
+            if nm not in params:
+                continue
+            if bins.opcode in _SLICE_OPS:
+                sliced_bytes[nm] = sliced_bytes.get(nm, 0) + bins.result_bytes
+            elif (bins.opcode == "dynamic-update-slice"
+                  and bins.operand_names and nm == bins.operand_names[0]):
+                # DUS destination param: in-place aliased, charge nothing
+                # here (the update operand is charged by its own producer)
+                pass
+            else:
+                full_use.add(nm)
+
+    total = 0
+    for nm, full in params.items():
+        if nm in full_use or nm not in sliced_bytes:
+            if nm in full_use:
+                total += full
+            elif nm in sliced_bytes:  # pragma: no cover
+                total += min(sliced_bytes[nm], full)
+            else:
+                # parameter only consumed by DUS-destination: free
+                total += 0 if _is_dus_dest_only(nm, body) else full
+        else:
+            total += min(sliced_bytes[nm], full)
+
+    # result side: DUS-rooted fusions write only the update slice
+    if root_ins is not None and root_ins.opcode == "dynamic-update-slice":
+        upd = (by_name.get(root_ins.operand_names[1])
+               if len(root_ins.operand_names) > 1 else None)
+        # update operand may be body-local: look it up in the body first
+        upd_local = next((b for b in body.instructions
+                          if len(root_ins.operand_names) > 1
+                          and b.name == root_ins.operand_names[1]), None)
+        upd_bytes = (upd_local.result_bytes if upd_local is not None
+                     else (upd.result_bytes if upd is not None else
+                           ins.result_bytes))
+        total += upd_bytes
+    else:
+        total += ins.result_bytes
+    return total
+
+
+def _is_dus_dest_only(param_name: str, body: Computation) -> bool:
+    for bins in body.instructions:
+        if bins.opcode == "parameter":
+            continue
+        if param_name in bins.operand_names:
+            if not (bins.opcode == "dynamic-update-slice"
+                    and bins.operand_names[0] == param_name):
+                return False
+    return True
+
+
+def _dot_flops(ins: Instruction, by_name: dict) -> float:
+    if not ins.operand_names:
+        return 0.0
+    lhs = by_name.get(ins.operand_names[0])
+    if lhs is None or not lhs.result_tokens:
+        return 0.0
+    dims_str = lhs.result_tokens[0][1]
+    lhs_dims = [int(x) for x in dims_str.split(",")] if dims_str else []
+    m = _DOT_CDIMS_RE.search(ins.line)
+    contracting = ([int(x) for x in m.group(1).split(",")]
+                   if m and m.group(1) else [])
+    csize = 1
+    for c in contracting:
+        if c < len(lhs_dims):
+            csize *= lhs_dims[c]
+    out = (_shape_elems(ins.result_tokens[0][1])
+           if ins.result_tokens else 1)
+    return 2.0 * out * csize
+
+
+def _collective_moved_bytes(ins: Instruction, by_name: dict) -> int:
+    rb = ins.result_bytes
+    ob = _operand_bytes(ins, by_name) or rb
+    if ins.opcode.startswith("all-gather"):
+        return rb
+    if ins.opcode.startswith("reduce-scatter"):
+        return ob
+    if ins.opcode.startswith("all-reduce"):
+        return 2 * ob
+    return ob
+
+
+_BF16_CONVERT_RE = re.compile(r"=\s*bf16\[")
+
+
+def _is_bf16_wire(ins: Instruction, by_name: dict, comps: dict) -> bool:
+    """True when an f32 collective carries a value that is semantically bf16.
+
+    XLA:CPU's float-normalization pass upcasts bf16 dots AND bf16 collectives
+    to f32 (the CPU has no native bf16 reductions), leaving telltale
+    f32->bf16->f32 round-trips in the producing fusion.  On the TPU target
+    the same program moves bf16 over the wire, so these collectives are
+    counted at 2 bytes/element (raw f32 figures are reported alongside).
+    """
+    if not ins.result_tokens or ins.result_tokens[0][0] != "f32":
+        if not any(d == "f32" for d, _ in ins.result_tokens):
+            return False
+    for nm in ins.operand_names:
+        prod = by_name.get(nm)
+        if prod is None:
+            continue
+        if prod.opcode == "convert" and "bf16" in prod.line.split("convert", 1)[1]:
+            return True
+        if prod.opcode == "fusion":
+            m = _CALLS_RE.search(prod.line)
+            body = comps.get(m.group(1)) if m else None
+            if body and any(_BF16_CONVERT_RE.search(b.line)
+                            for b in body.instructions):
+                return True
+    return False
+
+
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _crosses_pod(line: str, pod_boundary: int) -> bool:
+    """Exact replica-group evaluation: a group crosses the pod boundary iff
+    it mixes device ids below and at/above ``pod_boundary``."""
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        try:
+            ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        except ValueError:
+            return False
+        return (any(i < pod_boundary for i in ids)
+                and any(i >= pod_boundary for i in ids))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as _np
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        reshape = [int(x) for x in m.group(3).split(",")]
+        total = n_groups * group_size
+        if total <= pod_boundary:
+            return False
+        ids = _np.arange(total).reshape(reshape)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(n_groups, group_size)
+        lo = (groups < pod_boundary).any(axis=1)
+        hi = (groups >= pod_boundary).any(axis=1)
+        return bool((lo & hi).any())
+    return False
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float  # bf16-wire-corrected (TPU-projected)
+    dci_bytes: float
+    collective_by_kind: dict
+    collective_ops: int
+    dot_flops_by_shape: dict
+    largest_collectives: list
+    while_trip_counts: list
+    collective_bytes_raw: float = 0.0  # as seen in CPU-legalized HLO
+
+    def to_json(self):
+        d = dataclasses.asdict(self)
+        d["dot_flops_by_shape"] = dict(sorted(
+            self.dot_flops_by_shape.items(), key=lambda kv: -kv[1])[:12])
+        return d
+
+
+def analyze(hlo_text: str, *, pod_boundary: int = 256) -> HloStats:
+    comps, by_name, entry_name = parse_module(hlo_text)
+    assign_multipliers(comps, entry_name)
+
+    flops = 0.0
+    hbm = 0.0
+    coll = 0.0
+    coll_raw = 0.0
+    dci = 0.0
+    by_kind: dict[str, float] = {}
+    n_coll = 0
+    dot_by_shape: dict[str, float] = {}
+    largest: list = []
+    trips: list = []
+
+    for comp in comps.values():
+        mult = comp.multiplier
+        if mult <= 0:
+            continue  # dead computation
+        for ins in comp.instructions:
+            if ins.opcode == "while":
+                mc = _WHILE_COND_RE.search(ins.line)
+                if mc and mc.group(1) in comps:
+                    trips.append(_trip_count(comps[mc.group(1)]))
+            if ins.opcode == "dot":
+                f = _dot_flops(ins, by_name) * mult
+                flops += f
+                key = (ins.result_tokens[0][1] if ins.result_tokens else "?")
+                dot_by_shape[key] = dot_by_shape.get(key, 0.0) + f
+            kind = next((k for k in _COLLECTIVES
+                         if ins.opcode == k or ins.opcode == k + "-start"),
+                        None)
+            if kind is not None:
+                moved_raw = _collective_moved_bytes(ins, by_name) * mult
+                moved = (moved_raw // 2
+                         if _is_bf16_wire(ins, by_name, comps) else moved_raw)
+                coll_raw += moved_raw
+                coll += moved
+                by_kind[kind] = by_kind.get(kind, 0.0) + moved
+                n_coll += 1
+                largest.append((moved, kind, ins.line[:140]))
+                if _crosses_pod(ins.line, pod_boundary):
+                    dci += moved
+            # HBM bytes: top-level ops of non-fusion computations
+            if comp.is_fusion_body or ins.opcode in _SKIP_BYTES_OPS:
+                continue
+            if ins.opcode == "fusion":
+                hbm += _fusion_traffic(ins, comps, by_name) * mult
+            elif ins.opcode in _SLICE_OPS:
+                hbm += 2 * ins.result_bytes * mult  # read slice + write
+            elif ins.opcode == "dynamic-update-slice":
+                upd = (by_name.get(ins.operand_names[1])
+                       if len(ins.operand_names) > 1 else None)
+                ub = upd.result_bytes if upd is not None else ins.result_bytes
+                hbm += 2 * ub * mult
+            else:
+                hbm += (ins.result_bytes
+                        + _operand_bytes(ins, by_name)) * mult
+
+    largest.sort(key=lambda t: -t[0])
+    return HloStats(
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll, dci_bytes=dci,
+        collective_by_kind=by_kind, collective_ops=n_coll,
+        dot_flops_by_shape=dot_by_shape,
+        largest_collectives=[(int(b), k, l) for b, k, l in largest[:10]],
+        while_trip_counts=sorted(trips, reverse=True)[:8],
+        collective_bytes_raw=coll_raw)

@@ -1,0 +1,195 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip):
+    PEAK_FLOPS = 197e12  bf16 FLOP/s (MXU)
+    HBM_BW     = 819e9   bytes/s
+    LINK_BW    = 50e9    bytes/s per ICI link (we charge one link; a 2D
+                 torus has more, so this is conservative)
+
+The compiled module is the *per-device* SPMD program, so cost_analysis()
+FLOPs/bytes and the collective operand bytes parsed from its HLO text are
+already per-chip quantities:
+
+    compute_s    = flops / PEAK_FLOPS
+    memory_s     = bytes_accessed / HBM_BW
+    collective_s = comm_bytes / LINK_BW
+
+Communicated-bytes model per op (ring algorithms, factor (n-1)/n ~ 1):
+    all-gather        -> result bytes
+    reduce-scatter    -> operand bytes
+    all-reduce        -> 2 x operand bytes  (RS + AG)
+    all-to-all        -> operand bytes
+    collective-permute-> operand bytes
+
+Ops whose replica groups cross the pod boundary (any group mixing device
+ids < 256 and >= 256 on the 512-chip mesh) are tallied separately as DCI
+traffic — the scarce resource in multi-pod training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"\b(pred|[suf](?:8|16|32|64)|bf16|c64|c128)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*(?:,|$)")
+
+
+def _token_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    total_bytes: int
+    dci_bytes: int
+    op_count: int
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def _crosses_pod(line: str, pod_boundary: int) -> bool:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return False
+    groups = m.group(1)
+    first = groups.split("}")[0].lstrip("{")
+    try:
+        ids = [int(x) for x in first.split(",") if x.strip()]
+    except ValueError:
+        return False
+    return (any(i < pod_boundary for i in ids)
+            and any(i >= pod_boundary for i in ids))
+
+
+def parse_collectives(hlo_text: str, *, pod_boundary: int = 256
+                      ) -> CollectiveStats:
+    by_kind: dict[str, int] = {}
+    total = 0
+    dci = 0
+    count = 0
+    for line in hlo_text.splitlines():
+        kind = None
+        for k in _COLLECTIVES:
+            # match the opcode position "= <types...> opcode(" to avoid
+            # matching e.g. metadata op_name paths
+            if f" {k}(" in line or f" {k}-start(" in line:
+                kind = k
+                break
+        if kind is None:
+            continue
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        tokens = _TYPE_RE.findall(line)
+        if not tokens:
+            continue
+        eq = line.find("=")
+        opcode_pos = line.find(f" {kind}")
+        # tokens before the opcode are the result type(s); after: operands
+        result_tokens, operand_tokens = [], []
+        for m in _TYPE_RE.finditer(line):
+            (result_tokens if m.start() < opcode_pos else operand_tokens
+             ).append(m.groups())
+        rb = sum(_token_bytes(d, s) for d, s in result_tokens)
+        ob = sum(_token_bytes(d, s) for d, s in operand_tokens) or rb
+        if kind == "all-gather":
+            moved = rb
+        elif kind == "reduce-scatter":
+            moved = ob
+        elif kind == "all-reduce":
+            moved = 2 * ob
+        else:
+            moved = ob
+        by_kind[kind] = by_kind.get(kind, 0) + moved
+        total += moved
+        count += 1
+        if _crosses_pod(line, pod_boundary):
+            dci += moved
+    return CollectiveStats(bytes_by_kind=by_kind, total_bytes=total,
+                           dci_bytes=dci, op_count=count)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    flops: float
+    bytes_accessed: float
+    comm_bytes: int
+    dci_bytes: int
+    model_flops_per_chip: float
+    useful_flop_ratio: float  # MODEL_FLOPS / HLO_FLOPS (per chip)
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(kind: str, active_params: float, batch: int, seq: int) -> float:
+    """Whole-job useful FLOPs: 6ND train, 2ND prefill, 2N*batch decode."""
+    if kind == "train":
+        return 6.0 * active_params * batch * seq
+    if kind == "prefill":
+        return 2.0 * active_params * batch * seq
+    return 2.0 * active_params * batch  # decode: one token per request
+
+
+def roofline_from_stats(stats, *, kind: str, active_params: float,
+                        batch: int, seq: int, chips: int) -> Roofline:
+    """Roofline from loop-aware HLO stats (launch/hlo_analysis.py)."""
+    compute_s = stats.flops / PEAK_FLOPS
+    memory_s = stats.hbm_bytes / HBM_BW
+    collective_s = stats.collective_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(kind, active_params, batch, seq) / chips
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, flops=stats.flops,
+        bytes_accessed=stats.hbm_bytes,
+        comm_bytes=int(stats.collective_bytes),
+        dci_bytes=int(stats.dci_bytes),
+        model_flops_per_chip=mf,
+        useful_flop_ratio=(mf / stats.flops if stats.flops > 0 else 0.0))
+
+
+def compute_roofline(cost: dict, coll: CollectiveStats, *, kind: str,
+                     active_params: float, batch: int, seq: int,
+                     chips: int) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    by = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = by / HBM_BW
+    collective_s = coll.total_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(kind, active_params, batch, seq) / chips
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, flops=flops, bytes_accessed=by,
+        comm_bytes=coll.total_bytes, dci_bytes=coll.dci_bytes,
+        model_flops_per_chip=mf,
+        useful_flop_ratio=(mf / flops if flops > 0 else 0.0))

@@ -1,0 +1,61 @@
+"""Serving driver: ``python -m repro.launch.serve --arch granite-3-2b --reduced``
+
+Spins up the continuous-batching engine on a reduced (or full, on real
+hardware) config and runs a batch of synthetic prompts through it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models import model as M
+from repro.serving.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    if cfg.frontend != "none" or cfg.encoder_only:
+        raise SystemExit(f"{cfg.name}: engine demo serves token-LM archs")
+
+    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServeEngine(cfg, params, slots=args.slots, max_seq=args.max_seq)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 17))
+        reqs.append(Request(
+            uid=i, tokens=rng.integers(0, cfg.vocab_size, plen).tolist(),
+            max_new_tokens=args.max_new))
+        engine.submit(reqs[-1])
+
+    t0 = time.perf_counter()
+    engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    total_new = sum(len(r.output) for r in reqs)
+    assert all(r.done for r in reqs)
+    print(f"served {len(reqs)} requests / {total_new} tokens in {dt:.2f}s "
+          f"({total_new / dt:.1f} tok/s, slots={args.slots})")
+    for r in reqs[:3]:
+        print(f"  req {r.uid}: prompt_len={len(r.tokens)} -> {r.output[:8]}…")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` mirrors data/pipeline.py batch structures but
+allocates nothing — the dry-run lowers against these.  ``abstract_*`` build
+the matching abstract state/caches via ``jax.eval_shape``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as model_mod
+from repro.training.train_loop import TrainConfig, init_train_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio_stub":
+        return {"embeds": SDS((b, s, cfg.frontend_dim), jnp.float32),
+                "labels": SDS((b, s), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        text = s - cfg.num_prefix_embeds
+        return {"image_embeds": SDS((b, cfg.num_prefix_embeds,
+                                     cfg.frontend_dim), jnp.float32),
+                "tokens": SDS((b, text), jnp.int32),
+                "labels": SDS((b, text), jnp.int32)}
+    return {"tokens": SDS((b, s), jnp.int32),
+            "labels": SDS((b, s), jnp.int32)}
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    spec = train_input_specs(cfg, shape)
+    spec.pop("labels", None)
+    return spec
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b = shape.global_batch
+    return {"token": SDS((b, 1), jnp.int32), "pos": SDS((b,), jnp.int32)}
+
+
+def abstract_params(cfg: ArchConfig):
+    key = SDS((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(model_mod.init_params, cfg=cfg),
+                          key)
+
+
+def abstract_train_state(cfg: ArchConfig, tc: TrainConfig):
+    key = SDS((2,), jnp.uint32)
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, tc), key)
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        functools.partial(model_mod.init_caches, cfg, batch, max_seq))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, *,
+                tc: TrainConfig | None = None) -> dict[str, Any]:
+    """All abstract inputs for the step this cell lowers.
+
+    Returns {'kind', 'args': tuple of abstract pytrees} matching the
+    signature of the lowered step function (see launch/steps.py).
+    """
+    tc = tc or TrainConfig.for_arch(cfg)
+    if shape.kind == "train":
+        state = abstract_train_state(cfg, tc)
+        return {"kind": "train",
+                "args": (state, train_input_specs(cfg, shape))}
+    params = abstract_params(cfg)
+    if shape.kind == "prefill":
+        caches = abstract_caches(cfg, shape.global_batch, shape.seq_len)
+        return {"kind": "prefill",
+                "args": (params, prefill_input_specs(cfg, shape), caches)}
+    if shape.kind == "decode":
+        caches = abstract_caches(cfg, shape.global_batch, shape.seq_len)
+        d = decode_input_specs(cfg, shape)
+        return {"kind": "decode",
+                "args": (params, d["token"], d["pos"], caches)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,122 @@
+"""The three step functions each (arch x shape) cell lowers, plus their
+sharding assignments.  Shared by dryrun.py (abstract) and train.py/serve.py
+(concrete execution)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.dist import sharding as shr
+from repro.models import model as model_mod
+from repro.models.common import set_mesh
+from repro.training.train_loop import TrainConfig, TrainState, make_train_step
+
+
+def make_step_fn(cfg: ArchConfig, kind: str, tc: TrainConfig):
+    """Returns the function the cell lowers (closure over cfg)."""
+    if kind == "train":
+        inner = make_train_step(cfg, tc)
+
+        def train_step(state: TrainState, batch: dict):
+            return inner(state, batch)
+        return train_step
+
+    if kind == "prefill":
+        def prefill_step(params, batch, caches):
+            return model_mod.forward_prefill(params, cfg, batch, caches)
+        return prefill_step
+
+    if kind == "decode":
+        def serve_step(params, token, pos, caches):
+            return model_mod.forward_decode(params, cfg, token, pos, caches)
+        return serve_step
+
+    raise ValueError(kind)
+
+
+def _state_shardings(state_abs, mesh: Mesh):
+    """TrainState shardings: params rules applied to params & optimizer."""
+    params_sh = shr.param_specs(state_abs.params, mesh)
+    opt_sh = jax.tree.map(
+        lambda leaf: None, state_abs.opt_state)  # placeholder, replaced below
+    # optimizer state mirrors the param tree per field; apply the same rules
+    opt_sh = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: shr.named(mesh, shr._rule_for(path, leaf),
+                                     tuple(leaf.shape)),
+        state_abs.opt_state)
+    ef_sh = None
+    if state_abs.ef_state is not None:
+        ef_sh = jax.tree_util.tree_map_with_path(
+            lambda path, leaf: shr.named(mesh, shr._rule_for(path, leaf),
+                                         tuple(leaf.shape)),
+            state_abs.ef_state)
+    return TrainState(step=shr.named(mesh, P()), params=params_sh,
+                      opt_state=opt_sh, ef_state=ef_sh)
+
+
+HBM_SERVE_BUDGET = 8e9  # bytes/device available for TP-resident weights
+
+
+def _serve_replicated(cfg: ArchConfig, mesh: Mesh) -> bool:
+    """True when bf16 weights / model-axis fit the serving HBM budget —
+    then serving drops FSDP weight sharding (no per-step weight gathers)."""
+    model_ways = mesh.shape.get("model", 1)
+    return cfg.param_count() * 2 / model_ways <= HBM_SERVE_BUDGET
+
+
+def shardings_for(kind: str, args: tuple, mesh: Mesh,
+                  cfg: ArchConfig | None = None):
+    """in_shardings pytree matching input_specs(...)['args']."""
+    if kind == "train":
+        state_abs, batch_abs = args
+        return (_state_shardings(state_abs, mesh),
+                shr.batch_specs(batch_abs, mesh))
+    rep = cfg is not None and _serve_replicated(cfg, mesh)
+    if kind == "prefill":
+        params_abs, batch_abs, caches_abs = args
+        return (shr.param_specs(params_abs, mesh, serve_replicated=rep),
+                shr.batch_specs(batch_abs, mesh),
+                shr.cache_specs(caches_abs, mesh))
+    if kind == "decode":
+        params_abs, token_abs, pos_abs, caches_abs = args
+        return (shr.param_specs(params_abs, mesh, serve_replicated=rep),
+                shr.named(mesh, P(shr.FSDP_AXES), tuple(token_abs.shape)),
+                shr.named(mesh, P(shr.FSDP_AXES), tuple(pos_abs.shape)),
+                shr.cache_specs(caches_abs, mesh))
+    raise ValueError(kind)
+
+
+def out_shardings_for(kind: str, args: tuple, mesh: Mesh,
+                      cfg: ArchConfig | None = None):
+    ins = shardings_for(kind, args, mesh, cfg)
+    if kind == "train":
+        # (new_state, metrics)
+        return (ins[0], None)
+    if kind == "prefill":
+        # (last logits, caches)
+        return (None, ins[2])
+    if kind == "decode":
+        return (None, ins[3])
+    raise ValueError(kind)
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, *,
+               tc: TrainConfig | None = None):
+    """jit(step).lower(...) for one (arch x shape) on ``mesh``."""
+    from repro.launch import specs as specs_mod
+
+    tc = tc or TrainConfig.for_arch(cfg)
+    spec = specs_mod.input_specs(cfg, shape, tc=tc)
+    kind, args = spec["kind"], spec["args"]
+    step = make_step_fn(cfg, kind, tc)
+    in_sh = shardings_for(kind, args, mesh, cfg)
+    out_sh = out_shardings_for(kind, args, mesh, cfg)
+    with mesh, set_mesh(mesh):
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+    return lowered, kind

@@ -1,0 +1,297 @@
+"""Attention layers: GQA/MQA/MHA softmax attention and DeepSeek-style MLA.
+
+Full-sequence paths are einsum-based (XLA) with an optional Pallas flash
+path (``use_flash``) for real TPUs; decode paths operate on a static-shape
+KV cache with position masking.
+
+MLA (multi-head latent attention): training/prefill uses the expanded form;
+decode uses the *absorbed* form operating directly on the compressed
+(c_kv, k_rope) cache — the cache stores only kv_lora_rank + rope_dim floats
+per position.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import (
+    BATCH_AXES, MODEL_AXIS, apply_rope, dense_init, rms_norm, shard,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key: Array, cfg: ArchConfig) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_eff
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], (d, h * hd), cfg.pdtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), cfg.pdtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), cfg.pdtype),
+        "wo": dense_init(ks[3], (h * hd, d), cfg.pdtype),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((h * hd,), cfg.pdtype)
+        params["bk"] = jnp.zeros((hkv * hd,), cfg.pdtype)
+        params["bv"] = jnp.zeros((hkv * hd,), cfg.pdtype)
+    return params
+
+
+def _project_qkv(params: dict, x: Array, cfg: ArchConfig):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_eff
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    return q, k, v
+
+
+def attention_forward(params: dict, x: Array, positions: Array,
+                      cfg: ArchConfig, *, use_flash: bool = False,
+                      prefix_len: int = 0) -> Array:
+    """Full-sequence attention.  x: (b, s, d); positions: (b, s).
+
+    ``prefix_len > 0`` relaxes the causal mask to prefix-LM semantics: every
+    query may attend to all keys with position < prefix_len (PaliGemma's
+    bidirectional image prefix).
+    """
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_eff
+    group = h // hkv
+    q, k, v = _project_qkv(params, x, cfg)
+    q = apply_rope(q.transpose(0, 2, 1, 3), positions[:, None, :], cfg.rope_theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), positions[:, None, :], cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    q = shard(q, BATCH_AXES, MODEL_AXIS, None, None)
+    k = shard(k, BATCH_AXES, MODEL_AXIS, None, None)
+
+    if use_flash and prefix_len == 0:
+        from repro.kernels import ops
+        ctx = ops.flash_attention(q, k, v, causal=cfg.causal)
+    else:
+        qg = q.reshape(b, hkv, group, s, hd)
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k) / (hd ** 0.5)
+        logits = logits.astype(jnp.float32)
+        if cfg.causal:
+            mask = positions[:, None, None, None, :] <= positions[:, None, None, :, None]
+            if prefix_len > 0:
+                mask = mask | (positions[:, None, None, None, :] < prefix_len)
+            logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        ctx = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v).reshape(b, h, s, hd)
+
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return ctx @ params["wo"]
+
+
+class KVCache(NamedTuple):
+    k: Array  # (b, s_max, hkv, hd)
+    v: Array  # (b, s_max, hkv, hd)
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int) -> KVCache:
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim_eff
+    shape = (batch, max_seq, hkv, hd)
+    return KVCache(k=jnp.zeros(shape, cfg.dtype), v=jnp.zeros(shape, cfg.dtype))
+
+
+def attention_prefill(params: dict, x: Array, positions: Array,
+                      cfg: ArchConfig, cache: KVCache,
+                      *, use_flash: bool = False,
+                      prefix_len: int = 0) -> tuple[Array, KVCache]:
+    """Full-seq attention that also fills the cache prefix [0, s)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg)
+    k_rot = apply_rope(k.transpose(0, 2, 1, 3), positions[:, None, :],
+                       cfg.rope_theta).transpose(0, 2, 1, 3)
+    new_cache = KVCache(
+        k=jax.lax.dynamic_update_slice_in_dim(cache.k, k_rot.astype(cache.k.dtype), 0, axis=1),
+        v=jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=1),
+    )
+    out = attention_forward(params, x, positions, cfg, use_flash=use_flash,
+                            prefix_len=prefix_len)
+    return out, new_cache
+
+
+def attention_decode(params: dict, x: Array, pos: Array, cfg: ArchConfig,
+                     cache: KVCache) -> tuple[Array, KVCache]:
+    """One-token decode.  x: (b, 1, d); pos: (b,) current positions."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_eff
+    group = h // hkv
+    q, k, v = _project_qkv(params, x, cfg)
+    q = apply_rope(q.transpose(0, 2, 1, 3), pos[:, None, None], cfg.rope_theta)
+    k = apply_rope(k.transpose(0, 2, 1, 3), pos[:, None, None], cfg.rope_theta)
+
+    # write k/v at position pos (batched scatter along seq axis)
+    k_new = k.transpose(0, 2, 1, 3)  # (b, 1, hkv, hd)
+    v_new = v
+    idx = pos[:, None]  # (b, 1)
+    cache_k = _scatter_seq(cache.k, k_new.astype(cache.k.dtype), idx)
+    cache_v = _scatter_seq(cache.v, v_new.astype(cache.v.dtype), idx)
+    cache = KVCache(k=cache_k, v=cache_v)
+
+    # attend over the cache with position masking
+    kk = cache.k.transpose(0, 2, 1, 3)  # (b, hkv, s_max, hd)
+    vv = cache.v.transpose(0, 2, 1, 3)
+    kk = shard(kk, BATCH_AXES, None, MODEL_AXIS, None)
+    vv = shard(vv, BATCH_AXES, None, MODEL_AXIS, None)
+    qg = q.reshape(b, hkv, group, 1, hd)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kk) / (hd ** 0.5)
+    logits = logits.astype(jnp.float32)
+    s_max = cache.k.shape[1]
+    valid = jnp.arange(s_max)[None, :] <= pos[:, None]  # (b, s_max)
+    logits = jnp.where(valid[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(vv.dtype)
+    ctx = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vv)
+    ctx = ctx.reshape(b, h, 1, hd).transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
+    return ctx @ params["wo"], cache
+
+
+def _scatter_seq(cache: Array, new: Array, idx: Array) -> Array:
+    """Write new (b, 1, ...) into cache (b, s, ...) at per-batch index."""
+    b = cache.shape[0]
+    onehot = (jnp.arange(cache.shape[1])[None, :] == idx).astype(cache.dtype)
+    # (b, s, 1, 1) * (b, 1, ...) broadcast — avoids gather/scatter lowering
+    expand = onehot.reshape(b, cache.shape[1], *([1] * (cache.ndim - 2)))
+    return cache * (1 - expand) + expand * new
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key: Array, cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), cfg.pdtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), cfg.pdtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h * qk_dim), cfg.pdtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                            cfg.pdtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), cfg.pdtype),
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank,
+                                    h * (m.qk_nope_head_dim + m.v_head_dim)),
+                            cfg.pdtype),
+        "wo": dense_init(ks[4], (h * m.v_head_dim, d), cfg.pdtype),
+    }
+
+
+def _mla_q(params, x, positions, cfg):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q_c = rms_norm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = (q_c @ params["wq_b"]).reshape(b, s, h, qk_dim)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:].transpose(0, 2, 1, 3),
+                        positions[:, None, :], cfg.rope_theta).transpose(0, 2, 1, 3)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(params, x, positions, cfg):
+    m = cfg.mla
+    kv_all = x @ params["wkv_a"]
+    c_kv = rms_norm(kv_all[..., :m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = kv_all[..., m.kv_lora_rank:]  # (b, s, rope_dim), shared heads
+    k_rope = apply_rope(k_rope[:, None], positions[:, None, :],
+                        cfg.rope_theta)[:, 0]
+    return c_kv, k_rope
+
+
+def mla_forward(params: dict, x: Array, positions: Array,
+                cfg: ArchConfig) -> Array:
+    """Expanded MLA for train/prefill."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_q(params, x, positions, cfg)
+    c_kv, k_rope = _mla_kv_latent(params, x, positions, cfg)
+    kv = (c_kv @ params["wkv_b"]).reshape(
+        b, s, h, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+
+    scale = 1.0 / ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5)
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)) * scale
+    logits = logits.astype(jnp.float32)
+    if cfg.causal:
+        mask = positions[:, None, None, :] <= positions[:, None, :, None]
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return ctx.reshape(b, s, h * m.v_head_dim) @ params["wo"]
+
+
+class MLACache(NamedTuple):
+    c_kv: Array  # (b, s_max, kv_lora_rank)
+    k_rope: Array  # (b, s_max, rope_dim)
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_seq: int) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_seq, m.kv_lora_rank), cfg.dtype),
+        k_rope=jnp.zeros((batch, max_seq, m.qk_rope_head_dim), cfg.dtype))
+
+
+def mla_prefill(params: dict, x: Array, positions: Array, cfg: ArchConfig,
+                cache: MLACache) -> tuple[Array, MLACache]:
+    c_kv, k_rope = _mla_kv_latent(params, x, positions, cfg)
+    cache = MLACache(
+        c_kv=jax.lax.dynamic_update_slice_in_dim(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), 0, axis=1),
+        k_rope=jax.lax.dynamic_update_slice_in_dim(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), 0, axis=1))
+    return mla_forward(params, x, positions, cfg), cache
+
+
+def mla_decode(params: dict, x: Array, pos: Array, cfg: ArchConfig,
+               cache: MLACache) -> tuple[Array, MLACache]:
+    """Absorbed-form decode on the compressed cache."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_q(params, x, pos[:, None], cfg)  # (b,1,h,*)
+    c_new, kr_new = _mla_kv_latent(params, x, pos[:, None], cfg)
+    idx = pos[:, None]
+    cache = MLACache(
+        c_kv=_scatter_seq(cache.c_kv, c_new.astype(cache.c_kv.dtype), idx),
+        k_rope=_scatter_seq(cache.k_rope, kr_new.astype(cache.k_rope.dtype), idx))
+
+    wkv_b = params["wkv_b"].reshape(m.kv_lora_rank, h,
+                                    m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., :m.qk_nope_head_dim]  # (c, h, nope)
+    w_uv = wkv_b[..., m.qk_nope_head_dim:]  # (c, h, v)
+
+    q_lat = jnp.einsum("bqhn,chn->bqhc", q_nope, w_uk)  # absorb W_UK
+    scale = 1.0 / ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5)
+    logits = (jnp.einsum("bqhc,bsc->bhqs", q_lat, cache.c_kv)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, cache.k_rope)) * scale
+    logits = logits.astype(jnp.float32)
+    s_max = cache.c_kv.shape[1]
+    valid = jnp.arange(s_max)[None, :] <= pos[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(cache.c_kv.dtype)
+    ctx_lat = jnp.einsum("bhqs,bsc->bqhc", probs, cache.c_kv)
+    ctx = jnp.einsum("bqhc,chv->bqhv", ctx_lat, w_uv)
+    return ctx.reshape(b, 1, h * m.v_head_dim) @ params["wo"], cache

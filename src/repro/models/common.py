@@ -1,0 +1,124 @@
+"""Shared model components: norms, RoPE, initializers, sharding helper.
+
+Sharding convention (DESIGN.md §6): model code annotates activations/params
+with *logical* :class:`jax.sharding.PartitionSpec`s over the axis names
+``("pod", "data", "model")``.  On a single device (CPU smoke tests) the
+constraints are no-ops; under the dry-run / training meshes they pin GSPMD's
+propagation.  ``shard()`` is safe to call anywhere — it only applies the
+constraint when a mesh is active via ``set_mesh``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def shard(x: Array, *spec) -> Array:
+    """with_sharding_constraint against the active mesh (no-op without one).
+
+    Axis-name entries that don't exist in the active mesh are dropped, so the
+    same annotations work on the 2-axis single-pod and 3-axis multi-pod mesh.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+
+    def _filter(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return entry if entry in names else None
+        entry = tuple(e for e in entry if e in names)
+        return entry if entry else None
+
+    clean = P(*(_filter(e) for e in spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, clean))
+
+
+# Logical activation shardings:
+BATCH_AXES = ("pod", "data")  # batch dim is sharded over pod x data
+MODEL_AXIS = "model"
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype) -> Array:
+    return jnp.zeros((d,), dtype)  # stored as (weight - 1)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return rotated.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, shape, dtype, in_axis: int = 0) -> Array:
+    fan_in = shape[in_axis]
+    scale = (1.0 / max(fan_in, 1)) ** 0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key: Array, shape, dtype) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (1.0 / shape[1] ** 0.5)).astype(dtype)
+
+
+def activation_fn(name: str):
+    if name in ("silu", "geglu"):  # gating handled by caller
+        return jax.nn.silu if name == "silu" else jax.nn.gelu
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(name)

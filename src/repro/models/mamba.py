@@ -1,0 +1,246 @@
+"""Mamba2 (state-space duality) block — chunked SSD for train/prefill,
+O(1)-state recurrence for decode.
+
+Layout follows the Mamba2 reference: input projections produce
+[z | x | B | C | dt]; a short causal conv over x and (B,C); SSD with per-head
+scalar decay A and per-head skip D; gated RMSNorm; output projection.
+
+Sharding note (perf iteration 2, EXPERIMENTS.md §Perf): the reference packs
+[x|B|C] into ONE input projection and slices afterwards.  With the projection
+output sharded over the `model` axis, those slices cross shard boundaries
+and GSPMD materializes state-sized all-gathers/all-reduces (the dominant
+collective in the mamba2 prefill_32k baseline).  Here x/z/dt project through
+model-sharded matrices while the tiny B/C projection (2*n_groups*d_state
+columns) is replicated — every slice is then local, and the SSD einsums
+contract within a head shard.
+
+The chunked SSD computes, per chunk of length Q:
+  * intra-chunk: causal (C_q . B_k) pairs weighted by decay segments,
+  * chunk states: S = sum_k decay_to_end(k) * B_k x_k^T,
+  * inter-chunk: sequential scan over chunk states with chunk-level decay,
+  * output: Y = intra + C . carried_state (+ D * x).
+
+Decode recurrence per token: h = exp(dt*A) h + dt * B x ;  y = C.h + D*x,
+with a rolling conv-state buffer of width d_conv-1.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import (
+    BATCH_AXES, MODEL_AXIS, dense_init, rms_norm, shard,
+)
+
+Array = jax.Array
+
+
+def _dims(cfg: ArchConfig):
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    n_heads = d_in // mc.head_dim
+    bc_dim = 2 * mc.n_groups * mc.d_state
+    return mc, d_in, n_heads, bc_dim
+
+
+def init_mamba(key: Array, cfg: ArchConfig) -> dict:
+    mc, d_in, n_heads, bc_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], (d, d_in), cfg.pdtype),
+        "w_z": dense_init(ks[1], (d, d_in), cfg.pdtype),
+        "w_bc": dense_init(ks[2], (d, bc_dim), cfg.pdtype),
+        "w_dt": dense_init(ks[3], (d, n_heads), cfg.pdtype),
+        "conv_x_w": dense_init(ks[4], (mc.d_conv, d_in), cfg.pdtype),
+        "conv_x_b": jnp.zeros((d_in,), cfg.pdtype),
+        "conv_bc_w": dense_init(ks[5], (mc.d_conv, bc_dim), cfg.pdtype),
+        "conv_bc_b": jnp.zeros((bc_dim,), cfg.pdtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": jnp.zeros((d_in,), cfg.pdtype),
+        "w_out": dense_init(ks[6], (d_in, d), cfg.pdtype),
+    }
+
+
+def _project(params, u, cfg):
+    """u: (b, s, d) -> x (model-sharded), z, bc (replicated), dt."""
+    x = u @ params["w_x"]
+    z = u @ params["w_z"]
+    bc = u @ params["w_bc"]
+    dt = u @ params["w_dt"]
+    x = shard(x, BATCH_AXES, None, MODEL_AXIS)
+    z = shard(z, BATCH_AXES, None, MODEL_AXIS)
+    return x, z, bc, dt
+
+
+def _causal_conv(x: Array, w: Array, b: Array, d_conv: int) -> Array:
+    """Depthwise causal conv over sequence.  x: (b, s, c); w: (d_conv, c)."""
+    pad = d_conv - 1
+    xp = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(d_conv))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, a, b_mat, c_mat, d_skip, chunk):
+    """Chunked SSD.  x: (b, s, h, p); dt: (b, s, h); a: (h,) (negative);
+    b_mat/c_mat: (b, s, g, n); heads h grouped into g groups."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    heads_per_group = h // g
+
+    # broadcast groups to heads
+    bh = jnp.repeat(b_mat, heads_per_group, axis=2)  # (b, s, h, n)
+    ch = jnp.repeat(c_mat, heads_per_group, axis=2)
+
+    x = x.reshape(bsz, nc, chunk, h, p)
+    dt = dt.reshape(bsz, nc, chunk, h)
+    bh = bh.reshape(bsz, nc, chunk, h, n)
+    ch = ch.reshape(bsz, nc, chunk, h, n)
+
+    da = dt * a[None, None, None, :]  # (b, nc, q, h) negative decay exps
+    cum = jnp.cumsum(da, axis=2)  # inclusive within chunk
+
+    # intra-chunk: L[q, k] = exp(cum[q] - cum[k]) for q >= k.  Mask the
+    # exponent BEFORE exp: for q < k the difference is positive and exp
+    # overflows; a post-hoc where() would leak NaN into the backward pass.
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,q,k,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    l_mat = jnp.exp(seg)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", ch, bh) * l_mat
+    xdt = x * dt[..., None]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xdt)
+
+    # chunk end-states: S_c = sum_k exp(cum[-1] - cum[k]) B_k (dt x)_k
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,q,h)
+    states = jnp.einsum("bcqhn,bcqhp->bchnp", bh * decay_to_end[..., None], xdt)
+
+    # inter-chunk scan: H_{c} = exp(sum da_c) H_{c-1} + S_c  (carry prefix)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b, nc, h)
+
+    def scan_fn(carry, inp):
+        s_c, dec = inp
+        new = carry * dec[..., None, None] + s_c
+        return new, carry  # emit the *previous* state (exclusive prefix)
+
+    init = jnp.zeros_like(states[:, 0])
+    _, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,n,p)
+
+    # inter-chunk contribution: C_q . (decay_from_start(q) * H_prev)
+    decay_from_start = jnp.exp(cum)  # (b,nc,q,h)
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp",
+                         ch * decay_from_start[..., None], prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + x.reshape(bsz, s, h, p) * d_skip[None, None, :, None]
+    # final state (for prefill -> decode handoff)
+    final_state = init * 0 + (prev_states[:, -1] * chunk_decay[:, -1][..., None, None]
+                              + states[:, -1])
+    return y, final_state
+
+
+def mamba_forward(params: dict, u: Array, cfg: ArchConfig,
+                  return_state: bool = False):
+    """u: (b, s, d) -> (b, s, d) [, (conv_x_state, conv_bc_state, ssm)]."""
+    mc, d_in, n_heads, bc_dim = _dims(cfg)
+    bsz, s, _ = u.shape
+    x_raw, z, bc_raw, dt = _project(params, u, cfg)
+    x = _causal_conv(x_raw, params["conv_x_w"], params["conv_x_b"], mc.d_conv)
+    bc = _causal_conv(bc_raw, params["conv_bc_w"], params["conv_bc_b"],
+                      mc.d_conv)
+    b_mat = bc[..., :mc.n_groups * mc.d_state]
+    c_mat = bc[..., mc.n_groups * mc.d_state:]
+
+    x = x.reshape(bsz, s, n_heads, mc.head_dim).astype(jnp.float32)
+    b_mat = b_mat.reshape(bsz, s, mc.n_groups, mc.d_state).astype(jnp.float32)
+    c_mat = c_mat.reshape(bsz, s, mc.n_groups, mc.d_state).astype(jnp.float32)
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])  # (h,) negative
+
+    chunk = min(mc.chunk_size, s)
+    y, final_state = _ssd_chunked(x, dt_f, a, b_mat, c_mat, params["d_skip"],
+                                  chunk)
+    y = y.reshape(bsz, s, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    if not return_state:
+        return out
+    keep = mc.d_conv - 1
+    if keep > 0:
+        conv_x_state = x_raw[:, -keep:, :]
+        conv_bc_state = bc_raw[:, -keep:, :]
+    else:  # pragma: no cover
+        conv_x_state = jnp.zeros((bsz, 0, d_in), u.dtype)
+        conv_bc_state = jnp.zeros((bsz, 0, bc_dim), u.dtype)
+    return out, (conv_x_state.astype(jnp.float32),
+                 conv_bc_state.astype(jnp.float32), final_state)
+
+
+class MambaCache(NamedTuple):
+    conv_x: Array  # (b, d_conv-1, d_in) rolling raw x projections
+    conv_bc: Array  # (b, d_conv-1, 2*g*n) rolling raw B/C projections
+    ssm: Array  # (b, h, n, p) state
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int) -> MambaCache:
+    mc, d_in, n_heads, bc_dim = _dims(cfg)
+    return MambaCache(
+        conv_x=jnp.zeros((batch, mc.d_conv - 1, d_in), jnp.float32),
+        conv_bc=jnp.zeros((batch, mc.d_conv - 1, bc_dim), jnp.float32),
+        ssm=jnp.zeros((batch, n_heads, mc.d_state, mc.head_dim), jnp.float32))
+
+
+def mamba_decode(params: dict, u: Array, cfg: ArchConfig,
+                 cache: MambaCache) -> tuple[Array, MambaCache]:
+    """One-token recurrent step.  u: (b, 1, d)."""
+    mc, d_in, n_heads, bc_dim = _dims(cfg)
+    bsz = u.shape[0]
+    x_raw, z, bc_raw, dt = _project(params, u, cfg)
+    x_raw, z, bc_raw, dt = x_raw[:, 0], z[:, 0], bc_raw[:, 0], dt[:, 0]
+
+    # conv step on rolling buffers
+    def conv_step(cache_buf, new_col, w, b):
+        window = jnp.concatenate(
+            [cache_buf, new_col[:, None, :].astype(jnp.float32)], axis=1)
+        out = jnp.einsum("btc,tc->bc", window, w.astype(jnp.float32))
+        return jax.nn.silu(out + b.astype(jnp.float32)), window[:, 1:]
+
+    x_act, new_conv_x = conv_step(cache.conv_x, x_raw,
+                                  params["conv_x_w"], params["conv_x_b"])
+    bc_act, new_conv_bc = conv_step(cache.conv_bc, bc_raw,
+                                    params["conv_bc_w"], params["conv_bc_b"])
+
+    x = x_act.reshape(bsz, n_heads, mc.head_dim)
+    b_mat = bc_act[..., :mc.n_groups * mc.d_state].reshape(
+        bsz, mc.n_groups, mc.d_state)
+    c_mat = bc_act[..., mc.n_groups * mc.d_state:].reshape(
+        bsz, mc.n_groups, mc.d_state)
+    heads_per_group = n_heads // mc.n_groups
+    bh = jnp.repeat(b_mat, heads_per_group, axis=1)  # (b, h, n)
+    ch = jnp.repeat(c_mat, heads_per_group, axis=1)
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,h)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt_f * a[None, :])  # (b, h)
+
+    xdt = x * dt_f[..., None]  # (b, h, p)
+    new_ssm = (cache.ssm * decay[..., None, None]
+               + bh[..., None] * xdt[:, :, None, :])  # (b,h,n,p)
+    y = jnp.einsum("bhn,bhnp->bhp", ch, new_ssm)
+    y = y + x * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
+    out = (y @ params["w_out"])[:, None, :]
+    return out, MambaCache(conv_x=new_conv_x, conv_bc=new_conv_bc,
+                           ssm=new_ssm)

@@ -1,0 +1,202 @@
+"""Feed-forward layers: gated MLPs (SwiGLU/GeGLU/GELU) and einsum MoE.
+
+MoE uses the GShard/Switch capacity-based dispatch: softmax router -> top-k
+-> per-expert capacity C -> one-hot dispatch/combine einsums.  Experts are
+sharded over the ``model`` mesh axis (EP); the dispatch einsum generates the
+all-to-all on that axis under GSPMD.  A load-balancing auxiliary loss is
+returned alongside the output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.common import BATCH_AXES, MODEL_AXIS, dense_init, shard
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: Array, d_model: int, d_ff: int, activation: str,
+             dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    gated = activation in ("silu", "geglu")
+    params = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if gated:
+        params["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return params
+
+
+def mlp_forward(params: dict, x: Array, activation: str) -> Array:
+    up = x @ params["w_up"]
+    if activation == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * up
+    elif activation == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    if h.ndim == 3:
+        h = shard(h, BATCH_AXES, None, MODEL_AXIS)
+    else:  # (tokens, ff) — MoE shared-expert path
+        h = shard(h, BATCH_AXES, MODEL_AXIS)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def init_moe(key: Array, cfg: ArchConfig) -> dict:
+    moe = cfg.moe
+    d, e, f = cfg.d_model, moe.num_experts, moe.d_ff_expert
+    ks = jax.random.split(key, 5)
+    gated = cfg.activation in ("silu", "geglu")
+    params = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_up": dense_init(ks[1], (e, d, f), cfg.pdtype),
+        "w_down": dense_init(ks[2], (e, f, d), cfg.pdtype),
+    }
+    if gated:
+        params["w_gate"] = dense_init(ks[3], (e, d, f), cfg.pdtype)
+    if moe.num_shared_experts > 0:
+        params["shared"] = init_mlp(ks[4], d,
+                                    moe.num_shared_experts * f,
+                                    cfg.activation, cfg.pdtype)
+    return params
+
+
+def moe_forward(params: dict, x: Array, cfg: ArchConfig) -> tuple[Array, Array]:
+    """Returns (output, aux_loss).  x: (b, s, d).
+
+    Routing is gather/scatter-based (sort-free capacity assignment): each
+    (token, choice) gets a slot ``top_idx * capacity + pos_in_expert``; the
+    expert input buffer (e, c, d) is built with one scatter of token rows
+    and results come back with one gather.  Unlike the GShard one-hot
+    dispatch einsum (2*t*e*c*d FLOPs — 1600x the expert compute for
+    DeepSeek's e=256), routing costs O(t*k*d) memory traffic and no MXU
+    time.  Under GSPMD the scatter/gather across the EP (model) axis lowers
+    to all-to-all — the communication pattern real MoE deployments use.
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    e, k = moe.num_experts, moe.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])  # (t, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, k)  # (t, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): e * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(top_idx, e).sum(1)).astype(jnp.float32), axis=0) / k
+    aux = e * jnp.sum(me * ce)
+
+    # ---- grouped routing (perf iteration 1, EXPERIMENTS.md §Perf) --------
+    # Tokens are split into G groups aligned with the data shards; capacity
+    # is per (group, expert).  All scatter/gather runs group-LOCALLY (both
+    # sides share the group sharding, so GSPMD keeps it on-chip), and the
+    # only cross-device movement is the (G, e, c_g, d) buffer resharding
+    # from group-sharded to expert-sharded — a single all-to-all.  The
+    # naive global scatter instead lowered to full-buffer all-reduces
+    # (2.3 GB x 58 layers for deepseek-v3: the dominant baseline cost).
+    # G must MATCH the active mesh's pod*data extent: a 16-group buffer on a
+    # 32-shard multi-pod mesh gets padded 2x by GSPMD and the reshard
+    # degenerates (measured 7.6x collective blowup on deepseek 2x16x16).
+    from repro.models.common import current_mesh
+    mesh = current_mesh()
+    if mesh is not None:
+        fsdp = 1
+        for ax in ("pod", "data"):
+            fsdp *= mesh.shape.get(ax, 1)
+        groups = fsdp
+    else:
+        groups = moe.token_groups
+    while t % groups != 0:  # smoke configs with tiny t
+        groups //= 2
+    tg = t // groups
+    xg = xt.reshape(groups, tg, d)
+    xg = shard(xg, ("pod", "data"), None, None)
+    top_idx_g = top_idx.reshape(groups, tg, k)
+    top_p_g = top_p.reshape(groups, tg, k)
+
+    capacity = max(1, int(moe.capacity_factor * tg * k / e))
+    choice_one_hot = jax.nn.one_hot(top_idx_g, e, dtype=jnp.int32)  # (g,t,k,e)
+    flat = choice_one_hot.reshape(groups, tg * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # exclusive, per group
+    pos = (pos_in_expert * flat).sum(-1).reshape(groups, tg, k)
+    within = pos < capacity
+
+    slot = top_idx_g * capacity + jnp.minimum(pos, capacity - 1)
+    # dropped rows scatter OUT OF BOUNDS with mode='drop'; the surviving
+    # indices are unique by construction (expert*capacity + position), so
+    # unique_indices=True holds and XLA emits one plain scatter instead of
+    # the (u32 index-race + f32) companion pair the duplicate-tolerant
+    # lowering needs — halving dispatch HBM traffic (deepseek train_4k).
+    slot = jnp.where(within, slot, e * capacity)  # e*capacity = OOB
+    src = jnp.broadcast_to(jnp.arange(tg)[None, :, None], (groups, tg, k))
+
+    def scatter_group(x_g, slot_g, src_g):
+        buf = jnp.zeros((e * capacity, d), x_g.dtype)
+        return buf.at[slot_g.reshape(-1)].set(
+            x_g[src_g.reshape(-1)], unique_indices=True, mode="drop")
+
+    expert_in = jax.vmap(scatter_group)(xg, slot, src)  # (g, e*c, d)
+    expert_in = expert_in.reshape(groups, e, capacity, d)
+    expert_in = shard(expert_in, ("pod", "data"), None, None, None)
+    # reshard: group-sharded -> expert-sharded (the MoE all-to-all).
+    # IMPORTANT: annotate the transposed 4-D buffer BEFORE merging (g, c) —
+    # resharding dim0->dim1 of an intact transpose is GSPMD's all-to-all
+    # pattern; reshaping first degrades it to a full-buffer all-gather
+    # (measured 1.1e12 B/device per layer in the deepseek baseline).
+    expert_in = expert_in.transpose(1, 0, 2, 3)  # (e, g, c, d)
+    # dual sharding: e over model AND g stays on the data shards — slicing a
+    # replicated-on-model dim to model-sharded is free, so this reshard
+    # moves nothing; the expert GEMM batches over the (g, c) slice locally.
+    expert_in = shard(expert_in, MODEL_AXIS, ("pod", "data"), None, None)
+    expert_in = expert_in.reshape(e, groups * capacity, d)
+    expert_in = shard(expert_in, MODEL_AXIS, ("pod", "data"), None)
+
+    up = jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+    if cfg.activation in ("silu", "geglu"):
+        act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+        gate = jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"])
+        h = act(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    expert_out = shard(expert_out, MODEL_AXIS, ("pod", "data"), None)
+
+    # reshard back: the e dim must be gathered per group owner (all-gather
+    # over model — the minimal output movement, ~1.25x the t*k*d rows the
+    # combine actually reads) and g stays data-sharded throughout.
+    back = expert_out.reshape(e, groups, capacity, d)
+    back = shard(back, MODEL_AXIS, ("pod", "data"), None, None)
+    back = back.transpose(1, 0, 2, 3)  # (g, e, c, d)
+    back = shard(back, ("pod", "data"), None, None, None)
+    back = back.reshape(groups, e * capacity, d)
+    back = shard(back, ("pod", "data"), None, None)
+
+    def gather_group(buf_g, slot_g):
+        idx = jnp.minimum(slot_g, e * capacity - 1)  # overflow -> masked out
+        return buf_g[idx]  # (tg, k, d); gate_w zeroes dropped rows
+
+    rows = jax.vmap(gather_group)(back, slot)  # (g, tg, k, d)
+    gate_w = (top_p_g * within.astype(top_p_g.dtype)).astype(rows.dtype)
+    out = jnp.einsum("gtkd,gtk->gtd", rows, gate_w).reshape(t, d)
+
+    if moe.num_shared_experts > 0:
+        from repro.models.mlp import mlp_forward  # self-import for clarity
+        out = out + mlp_forward(params["shared"], xt, cfg.activation)
+
+    return out.reshape(b, s, d).astype(x.dtype), aux.astype(jnp.float32)

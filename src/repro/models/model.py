@@ -1,0 +1,516 @@
+"""Full model assembly for all assigned architectures.
+
+A model is a stack of pre-norm residual blocks.  Each block has
+
+    mixer : 'attn' (GQA/MQA softmax), 'mla' (DeepSeek latent), 'mamba'
+            (Mamba2 SSD), or 'nfft' (the paper's O(n) kernel attention)
+    ffn   : 'dense' (SwiGLU/GeGLU/GELU), 'moe', or None (pure-SSM blocks)
+
+Heterogeneous stacks (Jamba 1-attn:7-mamba with MoE-every-other, DeepSeek
+3-dense-then-MoE) are handled by the *layer plan*: the layer-signature
+sequence is split into a short explicit ``prefix`` and a repeating ``period``;
+the periodic part runs under ``jax.lax.scan`` over period-stacked parameters
+with one ``jax.checkpoint`` (remat) boundary per period.  This keeps the HLO
+size proportional to the period (<= 8 blocks), not the depth (126 layers for
+llama3-405b), which is what makes the 512-way dry-run compiles tractable.
+
+Three entry points per architecture:
+
+    forward_train   (tokens/embeds, labels)  -> (loss, metrics)
+    forward_prefill (tokens/embeds, caches)  -> (logits_last, caches)
+    forward_decode  (token, pos, caches)     -> (logits, caches)    # 1 token
+
+Modality frontends are stubs per the assignment: hubert (audio) and
+paligemma (vision) consume *precomputed* frame/patch embeddings through a
+single linear projection; everything downstream is the real backbone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import nfft_attention as nfft_mod
+from repro.models.common import (
+    BATCH_AXES, MODEL_AXIS, dense_init, embed_init, init_rms_norm, rms_norm,
+    shard,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+class LayerSig(NamedTuple):
+    mixer: str  # 'attn' | 'mla' | 'mamba' | 'nfft'
+    ffn: Optional[str]  # 'dense' | 'moe' | None
+
+
+class LayerPlan(NamedTuple):
+    prefix: tuple[LayerSig, ...]  # explicit leading layers
+    period: tuple[LayerSig, ...]  # repeating pattern
+    n_periods: int
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.prefix) + len(self.period) * self.n_periods
+
+
+def layer_signature(cfg: ArchConfig, i: int) -> LayerSig:
+    if cfg.is_attention_layer(i):
+        if cfg.nfft_attention is not None:
+            mixer = "nfft"
+        elif cfg.mla is not None:
+            mixer = "mla"
+        else:
+            mixer = "attn"
+    else:
+        mixer = "mamba"
+    if cfg.is_moe_layer(i):
+        ffn = "moe"
+    elif cfg.d_ff > 0:
+        ffn = "dense"
+    else:
+        ffn = None
+    return LayerSig(mixer, ffn)
+
+
+def make_layer_plan(cfg: ArchConfig, max_period: int = 16) -> LayerPlan:
+    """Smallest (prefix, period) decomposition of the signature sequence."""
+    sigs = tuple(layer_signature(cfg, i) for i in range(cfg.num_layers))
+    n = len(sigs)
+    for p_len in range(0, n + 1):
+        rest = sigs[p_len:]
+        if not rest:
+            return LayerPlan(prefix=sigs, period=(), n_periods=0)
+        for period in range(1, min(max_period, len(rest)) + 1):
+            if len(rest) % period != 0:
+                continue
+            pat = rest[:period]
+            if all(rest[j] == pat[j % period] for j in range(len(rest))):
+                return LayerPlan(prefix=sigs[:p_len], period=pat,
+                                 n_periods=len(rest) // period)
+    return LayerPlan(prefix=sigs, period=(), n_periods=0)  # pragma: no cover
+
+
+# ---------------------------------------------------------------------------
+# Per-block params
+# ---------------------------------------------------------------------------
+
+def _init_block(key: Array, sig: LayerSig, cfg: ArchConfig) -> dict:
+    k_mix, k_ffn = jax.random.split(key)
+    params: dict[str, Any] = {"norm_mixer": init_rms_norm(cfg.d_model, cfg.pdtype)}
+    if sig.mixer == "attn":
+        params["attn"] = attn_mod.init_attention(k_mix, cfg)
+    elif sig.mixer == "mla":
+        params["mla"] = attn_mod.init_mla(k_mix, cfg)
+    elif sig.mixer == "mamba":
+        params["mamba"] = mamba_mod.init_mamba(k_mix, cfg)
+    elif sig.mixer == "nfft":
+        params["nfft"] = nfft_mod.init_nfft_attention(k_mix, cfg)
+    else:  # pragma: no cover
+        raise ValueError(sig.mixer)
+    if sig.ffn is not None:
+        params["norm_ffn"] = init_rms_norm(cfg.d_model, cfg.pdtype)
+        if sig.ffn == "moe":
+            params["moe"] = mlp_mod.init_moe(k_ffn, cfg)
+        else:
+            params["mlp"] = mlp_mod.init_mlp(k_ffn, cfg.d_model, cfg.d_ff,
+                                             cfg.activation, cfg.pdtype)
+    return params
+
+
+def _init_block_cache(sig: LayerSig, cfg: ArchConfig, batch: int,
+                      max_seq: int):
+    if sig.mixer == "attn":
+        return attn_mod.init_kv_cache(cfg, batch, max_seq)
+    if sig.mixer == "mla":
+        return attn_mod.init_mla_cache(cfg, batch, max_seq)
+    if sig.mixer == "mamba":
+        return mamba_mod.init_mamba_cache(cfg, batch)
+    if sig.mixer == "nfft":
+        return nfft_mod.init_nfft_cache(cfg, batch)
+    raise ValueError(sig.mixer)  # pragma: no cover
+
+
+def _apply_block(params: dict, sig: LayerSig, x: Array, positions: Array,
+                 cfg: ArchConfig, *, mode: str, cache, prefix_len: int = 0):
+    """One residual block.  mode in {'train', 'prefill', 'decode'}.
+
+    Returns (x, new_cache, aux_loss).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, params["norm_mixer"], cfg.norm_eps)
+    new_cache = cache
+    if sig.mixer == "attn":
+        if mode == "train":
+            mix = attn_mod.attention_forward(params["attn"], h, positions,
+                                             cfg, prefix_len=prefix_len)
+        elif mode == "prefill":
+            mix, new_cache = attn_mod.attention_prefill(
+                params["attn"], h, positions, cfg, cache,
+                prefix_len=prefix_len)
+        else:
+            mix, new_cache = attn_mod.attention_decode(
+                params["attn"], h, positions, cfg, cache)
+    elif sig.mixer == "mla":
+        if mode == "train":
+            mix = attn_mod.mla_forward(params["mla"], h, positions, cfg)
+        elif mode == "prefill":
+            mix, new_cache = attn_mod.mla_prefill(params["mla"], h, positions,
+                                                  cfg, cache)
+        else:
+            mix, new_cache = attn_mod.mla_decode(params["mla"], h, positions,
+                                                 cfg, cache)
+    elif sig.mixer == "mamba":
+        if mode == "train":
+            mix = mamba_mod.mamba_forward(params["mamba"], h, cfg)
+        elif mode == "prefill":
+            mix, (conv_x, conv_bc, ssm_state) = mamba_mod.mamba_forward(
+                params["mamba"], h, cfg, return_state=True)
+            pad = cfg.mamba.d_conv - 1 - conv_x.shape[1]
+            if pad > 0:  # sequences shorter than the conv receptive field
+                conv_x = jnp.pad(conv_x, ((0, 0), (pad, 0), (0, 0)))
+                conv_bc = jnp.pad(conv_bc, ((0, 0), (pad, 0), (0, 0)))
+            new_cache = mamba_mod.MambaCache(conv_x=conv_x, conv_bc=conv_bc,
+                                             ssm=ssm_state)
+        else:
+            mix, new_cache = mamba_mod.mamba_decode(params["mamba"], h, cfg,
+                                                    cache)
+    elif sig.mixer == "nfft":
+        if mode == "train":
+            mix = nfft_mod.nfft_attention_forward(params["nfft"], h, cfg)
+        elif mode == "prefill":
+            mix, new_cache = nfft_mod.nfft_attention_prefill(
+                params["nfft"], h, cfg, cache)
+        else:
+            mix, new_cache = nfft_mod.nfft_attention_decode(
+                params["nfft"], h, cfg, cache)
+    else:  # pragma: no cover
+        raise ValueError(sig.mixer)
+    x = x + mix
+    x = shard(x, BATCH_AXES, None, None)
+
+    if sig.ffn is not None:
+        h2 = rms_norm(x, params["norm_ffn"], cfg.norm_eps)
+        if sig.ffn == "moe":
+            out, aux = mlp_mod.moe_forward(params["moe"], h2, cfg)
+        else:
+            out = mlp_mod.mlp_forward(params["mlp"], h2, cfg.activation)
+        x = x + out
+        x = shard(x, BATCH_AXES, None, None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params
+# ---------------------------------------------------------------------------
+
+def init_params(key: Array, cfg: ArchConfig) -> dict:
+    plan = make_layer_plan(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+
+    if cfg.frontend == "none" or cfg.frontend == "vision_stub":
+        params["embed"] = embed_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                                     cfg.pdtype)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = dense_init(
+            keys[1], (cfg.frontend_dim, cfg.d_model), cfg.pdtype)
+
+    # prefix blocks: a list of per-layer param trees
+    if plan.prefix:
+        pk = jax.random.split(keys[2], len(plan.prefix))
+        params["prefix"] = [
+            _init_block(pk[i], sig, cfg) for i, sig in enumerate(plan.prefix)]
+
+    # periodic blocks: one stacked tree per slot-in-period
+    if plan.n_periods > 0:
+        slot_params = []
+        sk = jax.random.split(keys[3], len(plan.period))
+        for slot, sig in enumerate(plan.period):
+            per_period = jax.random.split(sk[slot], plan.n_periods)
+            slot_params.append(
+                jax.vmap(lambda k: _init_block(k, sig, cfg))(per_period))
+        params["stack"] = slot_params
+
+    params["final_norm"] = init_rms_norm(cfg.d_model, cfg.pdtype)
+    if not cfg.tie_embeddings or cfg.frontend == "audio_stub":
+        params["lm_head"] = dense_init(keys[4], (cfg.d_model, cfg.vocab_size),
+                                       cfg.pdtype)
+    if cfg.mtp_depth > 0:
+        # DeepSeek-style MTP: per extra depth, a combiner + one extra block.
+        mtp = []
+        mk = jax.random.split(keys[5], cfg.mtp_depth)
+        sig = layer_signature(cfg, cfg.num_layers - 1)
+        for t in range(cfg.mtp_depth):
+            bk, ck = jax.random.split(mk[t])
+            mtp.append({
+                "combine": dense_init(ck, (2 * cfg.d_model, cfg.d_model),
+                                      cfg.pdtype),
+                "norm_h": init_rms_norm(cfg.d_model, cfg.pdtype),
+                "norm_e": init_rms_norm(cfg.d_model, cfg.pdtype),
+                "block": _init_block(bk, sig, cfg),
+            })
+        params["mtp"] = mtp
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: dict, cfg: ArchConfig, batch: dict) -> tuple[Array, Array, int]:
+    """Returns (x (b, s, d), positions (b, s), prefix_len)."""
+    prefix_len = 0
+    if cfg.frontend == "audio_stub":
+        x = batch["embeds"].astype(cfg.dtype) @ params["frontend_proj"]
+    elif cfg.frontend == "vision_stub":
+        img = batch["image_embeds"].astype(cfg.dtype) @ params["frontend_proj"]
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if cfg.embedding_scale:
+            tok = tok * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+        x = jnp.concatenate([img, tok], axis=1)
+        prefix_len = cfg.num_prefix_embeds
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if cfg.embedding_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = shard(x.astype(cfg.dtype), BATCH_AXES, None, None)
+    return x, positions, prefix_len
+
+
+def lm_logits(params: dict, cfg: ArchConfig, h: Array) -> Array:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if "lm_head" in params:
+        logits = h @ params["lm_head"]
+    else:
+        logits = h @ params["embed"].T
+    logits = shard(logits, BATCH_AXES, None, MODEL_AXIS)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Backbone (shared by all three modes)
+# ---------------------------------------------------------------------------
+
+def _run_backbone(params: dict, cfg: ArchConfig, x: Array, positions: Array,
+                  *, mode: str, caches=None, prefix_len: int = 0,
+                  remat: bool = True):
+    """Run prefix + scan-over-periods.  Returns (h, new_caches, aux_sum)."""
+    plan = make_layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: dict[str, Any] = {}
+
+    for i, sig in enumerate(plan.prefix):
+        cache_i = None if caches is None else caches["prefix"][i]
+        x, c, aux = _apply_block(params["prefix"][i], sig, x, positions, cfg,
+                                 mode=mode, cache=cache_i,
+                                 prefix_len=prefix_len)
+        aux_total = aux_total + aux
+        if caches is not None:
+            new_caches.setdefault("prefix", {})[i] = c
+
+    if plan.n_periods > 0:
+        def period_body(carry, per_step):
+            xx, aux_acc = carry
+            step_params, step_caches = per_step
+            out_caches = []
+            for slot, sig in enumerate(plan.period):
+                cache_s = None if step_caches is None else step_caches[slot]
+                xx, c, aux = _apply_block(step_params[slot], sig, xx,
+                                          positions, cfg, mode=mode,
+                                          cache=cache_s,
+                                          prefix_len=prefix_len)
+                aux_acc = aux_acc + aux
+                out_caches.append(c)
+            emitted = tuple(out_caches) if step_caches is not None else None
+            return (xx, aux_acc), emitted
+
+        body = jax.checkpoint(period_body) if (remat and mode == "train") \
+            else period_body
+        stack_caches = None if caches is None else caches["stack"]
+        (x, aux_total), emitted = jax.lax.scan(
+            body, (x, aux_total), (params["stack"], stack_caches))
+        if caches is not None:
+            new_caches["stack"] = list(emitted)
+
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Training forward + loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: Array, labels: Array, mask: Array) -> Array:
+    """Stable CE in fp32; mask selects counted positions."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def forward_train(params: dict, cfg: ArchConfig, batch: dict,
+                  *, remat: bool = True) -> tuple[Array, dict]:
+    """batch: tokens/embeds (+ labels, optional loss_mask).  -> (loss, metrics)."""
+    x, positions, prefix_len = embed_inputs(params, cfg, batch)
+    h, _, aux = _run_backbone(params, cfg, x, positions, mode="train",
+                              prefix_len=prefix_len, remat=remat)
+    logits = lm_logits(params, cfg, h)
+
+    labels = batch["labels"]
+    if cfg.frontend == "vision_stub":
+        # loss only over the text segment (labels align with tokens)
+        text_logits = logits[:, cfg.num_prefix_embeds:, :]
+        mask = batch.get("loss_mask", jnp.ones(labels.shape, jnp.float32))
+        loss = cross_entropy(text_logits, labels, mask)
+    elif cfg.encoder_only:
+        mask = batch.get("loss_mask", jnp.ones(labels.shape, jnp.float32))
+        loss = cross_entropy(logits, labels, mask)
+    else:
+        # next-token: predict labels[t] = tokens[t+1]; last position masked
+        mask = batch.get("loss_mask", jnp.ones(labels.shape, jnp.float32))
+        loss = cross_entropy(logits, labels, mask)
+
+    metrics = {"ce_loss": loss, "aux_loss": aux}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+
+    if cfg.mtp_depth > 0 and not cfg.encoder_only:
+        mtp_loss = _mtp_loss(params, cfg, h, batch, positions)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(params: dict, cfg: ArchConfig, h: Array, batch: dict,
+              positions: Array) -> Array:
+    """DeepSeek multi-token prediction: chain one extra block per depth.
+
+    Depth t predicts token_{i+t+1} from (h_i, embed(token_{i+t})) — we reuse
+    ``labels`` (already tokens shifted by 1) as the future-token stream.
+    """
+    labels = batch["labels"]
+    b, s = labels.shape
+    sig = layer_signature(cfg, cfg.num_layers - 1)
+    loss = jnp.zeros((), jnp.float32)
+    cur = h
+    for t, mtp in enumerate(params["mtp"]):
+        shift = t + 1
+        fut = jnp.roll(labels, -t, axis=1)  # token_{i+1+t} stream
+        fut_e = jnp.take(params["embed"], fut, axis=0)
+        merged = jnp.concatenate([
+            rms_norm(cur, mtp["norm_h"], cfg.norm_eps),
+            rms_norm(fut_e.astype(cur.dtype), mtp["norm_e"], cfg.norm_eps),
+        ], axis=-1) @ mtp["combine"]
+        cur, _, _ = _apply_block(mtp["block"], sig, merged, positions, cfg,
+                                 mode="train", cache=None)
+        logits = lm_logits(params, cfg, cur)
+        tgt = jnp.roll(labels, -shift, axis=1)
+        mask = (jnp.arange(s)[None, :] < s - shift).astype(jnp.float32)
+        mask = jnp.broadcast_to(mask, (b, s))
+        loss = loss + cross_entropy(logits, tgt, mask)
+    return loss / max(cfg.mtp_depth, 1)
+
+
+# ---------------------------------------------------------------------------
+# Serving forwards
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    plan = make_layer_plan(cfg)
+    caches: dict[str, Any] = {}
+    if plan.prefix:
+        caches["prefix"] = {
+            i: _init_block_cache(sig, cfg, batch, max_seq)
+            for i, sig in enumerate(plan.prefix)}
+    if plan.n_periods > 0:
+        def stack_cache(sig):
+            one = _init_block_cache(sig, cfg, batch, max_seq)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (plan.n_periods,) + a.shape),
+                one)
+        caches["stack"] = [stack_cache(sig) for sig in plan.period]
+    return caches
+
+
+def forward_prefill(params: dict, cfg: ArchConfig, batch: dict,
+                    caches: dict) -> tuple[Array, dict]:
+    """Process the full prompt; returns (last-position logits, caches)."""
+    x, positions, prefix_len = embed_inputs(params, cfg, batch)
+    h, caches, _ = _run_backbone(params, cfg, x, positions, mode="prefill",
+                                 caches=caches, prefix_len=prefix_len,
+                                 remat=False)
+    logits = lm_logits(params, cfg, h[:, -1:, :])
+    return logits, caches
+
+
+def forward_decode(params: dict, cfg: ArchConfig, token: Array, pos: Array,
+                   caches: dict) -> tuple[Array, dict]:
+    """One decode step.  token: (b, 1) int32; pos: (b,) current position."""
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    x = shard(x.astype(cfg.dtype), BATCH_AXES, None, None)
+    h, caches, _ = _run_backbone(params, cfg, x, pos, mode="decode",
+                                 caches=caches, remat=False)
+    logits = lm_logits(params, cfg, h)
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Reference (oracle) forward — plain per-layer loop, no scan/remat.  Used by
+# tests to check the scan-over-periods backbone is exactly the layer loop.
+# ---------------------------------------------------------------------------
+
+def forward_train_reference(params: dict, cfg: ArchConfig,
+                            batch: dict) -> tuple[Array, dict]:
+    plan = make_layer_plan(cfg)
+    x, positions, prefix_len = embed_inputs(params, cfg, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, sig in enumerate(plan.prefix):
+        x, _, aux = _apply_block(params["prefix"][i], sig, x, positions, cfg,
+                                 mode="train", cache=None,
+                                 prefix_len=prefix_len)
+        aux_total = aux_total + aux
+    for p in range(plan.n_periods):
+        for slot, sig in enumerate(plan.period):
+            blk = jax.tree.map(lambda a: a[p], params["stack"][slot])
+            x, _, aux = _apply_block(blk, sig, x, positions, cfg,
+                                     mode="train", cache=None,
+                                     prefix_len=prefix_len)
+            aux_total = aux_total + aux
+    logits = lm_logits(params, cfg, x)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_stub":
+        logits = logits[:, cfg.num_prefix_embeds:, :]
+    mask = batch.get("loss_mask", jnp.ones(labels.shape, jnp.float32))
+    loss = cross_entropy(logits, labels, mask)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux_total
+    if cfg.mtp_depth > 0 and not cfg.encoder_only:
+        loss = loss + 0.3 * _mtp_loss(params, cfg, x, batch, positions)
+    return loss, {"loss": loss}

@@ -1,0 +1,215 @@
+"""NFFT kernel attention — the paper's fast summation as an O(n) attention.
+
+The paper's core identity (Section 3):
+
+    K(q - k) ≈ K_RF(q - k) = sum_{l in I_N^d} b_hat[l] e^{2 pi i l.(q - k)}
+             = phi(q)^H diag(b_hat) phi(k),     phi(x)[l] = e^{-2 pi i l.x}
+
+separates queries from keys.  Attention with Gaussian-kernel scores and
+row-stochastic normalization (the paper's D^{-1} W̃, i.e. L_w) becomes a
+*linear attention* whose feature map is the lattice of trigonometric
+features with the paper's regularized Fourier coefficients:
+
+    out(q) = sum_i K(q-k_i) v_i / sum_i K(q-k_i)
+           = Re[phi(q)^H (b ⊙ S)] / Re[phi(q)^H (b ⊙ z)],
+      S = sum_i phi(k_i) v_i^T   (N^d x d_v),    z = sum_i phi(k_i).
+
+Causality comes for free: S, z are prefix sums.  Training uses the standard
+chunked scheme (inter-chunk via the running (S, z) state — this is exactly
+Algorithm 3.1's adjoint->multiply->forward structure per chunk; intra-chunk
+via exact O(Q^2) kernel evaluation).  Decode keeps (S, z) as the *entire*
+cache: O(N^d) memory independent of context length, O(N^d d_v) per step —
+the long_500k cell runs with a constant-size cache.
+
+Hardware adaptation note (DESIGN.md §3/§4): at model-internal sizes
+(N^d ≈ 1024 coefficients) the direct phase matmul (MXU) beats the
+window+FFT NFFT pipeline, so the transforms here are exact truncated NDFTs;
+the full NFFT machinery (repro.core.nfft) is the right tool on the graph
+side where N^d is large.  The two are mathematically interchangeable.
+
+Features are bounded into the admissible box by 0.17*tanh(.), so the node
+rescaling rho of Algorithm 3.2 is the identity by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init
+
+Array = jax.Array
+
+FEATURE_BOX = 0.17  # ||f||_inf <= 0.17 -> ||f||_2 <= 0.24 < 1/4 for d=2
+
+
+def lattice_frequencies(bandwidth: int, d: int) -> np.ndarray:
+    """I_N^d integer frequency lattice, FFT order, shape (N^d, d)."""
+    freqs = np.fft.fftfreq(bandwidth, d=1.0 / bandwidth).astype(np.float32)
+    grids = np.meshgrid(*([freqs] * d), indexing="ij")
+    return np.stack([g.reshape(-1) for g in grids], axis=-1)
+
+
+@functools.lru_cache(maxsize=32)
+def kernel_coefficients(bandwidth: int, d: int, sigma: float) -> np.ndarray:
+    """Regularized Gaussian Fourier coefficients b_hat (Eq. 3.4), flat (N^d,).
+
+    Computed once per (N, d, sigma) on host; eps_B = 0 (the Gaussian at the
+    feature-box scale decays well inside the torus).
+    """
+    from repro.core.kernels import make_kernel
+    from repro.core.regularization import kernel_fourier_coefficients
+
+    kern = make_kernel("gaussian", sigma=sigma)
+    with jax.ensure_compile_time_eval():
+        b = kernel_fourier_coefficients(kern, d, bandwidth, p=4, eps_b=0.0)
+        out = np.asarray(jax.device_get(jnp.real(b)), dtype=np.float32)
+    return out.reshape(-1)
+
+
+def phase_features(x: Array, freqs: Array) -> tuple[Array, Array]:
+    """cos/sin features (real pair of phi(x)).  x: (..., d) -> (..., N^d)."""
+    angles = 2.0 * jnp.pi * jnp.einsum("...d,ld->...l",
+                                       x.astype(jnp.float32), freqs)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def init_nfft_attention(key: Array, cfg: ArchConfig) -> dict:
+    nc = cfg.nfft_attention
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim_eff
+    ks = jax.random.split(key, 4)
+    return {
+        "wqf": dense_init(ks[0], (d, h * nc.feature_dim), cfg.pdtype),
+        "wkf": dense_init(ks[1], (d, h * nc.feature_dim), cfg.pdtype),
+        "wv": dense_init(ks[2], (d, h * hd), cfg.pdtype),
+        "wo": dense_init(ks[3], (h * hd, d), cfg.pdtype),
+    }
+
+
+def _features(params, x, cfg):
+    nc = cfg.nfft_attention
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qf = FEATURE_BOX * jnp.tanh((x @ params["wqf"]).astype(jnp.float32))
+    kf = FEATURE_BOX * jnp.tanh((x @ params["wkf"]).astype(jnp.float32))
+    qf = qf.reshape(b, s, h, nc.feature_dim)
+    kf = kf.reshape(b, s, h, nc.feature_dim)
+    v = (x @ params["wv"]).reshape(b, s, h, cfg.head_dim_eff)
+    return qf, kf, v
+
+
+def nfft_attention_forward(params: dict, x: Array, cfg: ArchConfig) -> Array:
+    """Chunked causal kernel attention (train/prefill)."""
+    nc = cfg.nfft_attention
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim_eff
+    chunk = min(128, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    freqs = jnp.asarray(lattice_frequencies(nc.bandwidth, nc.feature_dim))
+    bhat = jnp.asarray(kernel_coefficients(nc.bandwidth, nc.feature_dim,
+                                           nc.sigma))
+    qf, kf, v = _features(params, x, cfg)
+    # (b, h, n_chunks, chunk, *)
+    qf = qf.transpose(0, 2, 1, 3).reshape(b, h, n_chunks, chunk, -1)
+    kf = kf.transpose(0, 2, 1, 3).reshape(b, h, n_chunks, chunk, -1)
+    vc = v.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+        b, h, n_chunks, chunk, hd)
+
+    kcos, ksin = phase_features(kf, freqs)  # (b,h,c,Q,L)
+    qcos, qsin = phase_features(qf, freqs)
+
+    # per-chunk adjoint "NDFT": S_c = sum_i phi(k_i) [v_i; 1]
+    vc1 = jnp.concatenate([vc, jnp.ones_like(vc[..., :1])], -1)  # (.., hd+1)
+    s_cos = jnp.einsum("bhcql,bhcqe->bhcle", kcos, vc1)
+    s_sin = jnp.einsum("bhcql,bhcqe->bhcle", ksin, vc1)
+
+    # prefix-sum (exclusive) over chunks — the inter-chunk state
+    pre_cos = jnp.cumsum(s_cos, axis=2) - s_cos
+    pre_sin = jnp.cumsum(s_sin, axis=2) - s_sin
+
+    # inter-chunk: Re[phi(q)^H (b ⊙ S_prefix)]
+    #   = qcos . (b ⊙ S_cos) + qsin . (b ⊙ S_sin)   (cos/sin expansion)
+    inter = (jnp.einsum("bhcql,bhcle->bhcqe", qcos, bhat[:, None] * pre_cos)
+             + jnp.einsum("bhcql,bhcle->bhcqe", qsin, bhat[:, None] * pre_sin))
+
+    # intra-chunk: exact kernel, causal (diag included: K(0) self-weight)
+    diff = qf[..., :, None, :] - kf[..., None, :, :]
+    r2 = jnp.sum(diff * diff, -1)
+    w = jnp.exp(-r2 / (nc.sigma ** 2))
+    causal = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    w = w * causal
+    intra = jnp.einsum("bhcqk,bhcke->bhcqe", w, vc1)
+
+    total = inter + intra
+    num, den = total[..., :hd], total[..., hd:]
+    out = num / jnp.maximum(den, 1e-6)
+    out = out.reshape(b, h, s, hd).transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return out.astype(x.dtype) @ params["wo"]
+
+
+class NFFTCache(NamedTuple):
+    """Constant-size decode state: accumulated spectral sums (S, z) pair.
+
+    s_cos/s_sin: (b, h, N^d, hd+1) — value+degree channels.  Memory is
+    independent of context length (the paper's O(n) made O(1)-per-step).
+    """
+    s_cos: Array
+    s_sin: Array
+
+
+def init_nfft_cache(cfg: ArchConfig, batch: int) -> NFFTCache:
+    nc = cfg.nfft_attention
+    n_coef = nc.bandwidth ** nc.feature_dim
+    shape = (batch, cfg.num_heads, n_coef, cfg.head_dim_eff + 1)
+    return NFFTCache(s_cos=jnp.zeros(shape, jnp.float32),
+                     s_sin=jnp.zeros(shape, jnp.float32))
+
+
+def nfft_attention_prefill(params: dict, x: Array, cfg: ArchConfig,
+                           cache: NFFTCache) -> tuple[Array, NFFTCache]:
+    """Forward + produce the accumulated state over the whole prefix."""
+    nc = cfg.nfft_attention
+    b, s, _ = x.shape
+    hd = cfg.head_dim_eff
+    freqs = jnp.asarray(lattice_frequencies(nc.bandwidth, nc.feature_dim))
+    out = nfft_attention_forward(params, x, cfg)
+    _, kf, v = _features(params, x, cfg)
+    kcos, ksin = phase_features(kf, freqs)  # (b,s,h,L)
+    v1 = jnp.concatenate([v.astype(jnp.float32),
+                          jnp.ones_like(v[..., :1], jnp.float32)], -1)
+    s_cos = jnp.einsum("bshl,bshe->bhle", kcos, v1)
+    s_sin = jnp.einsum("bshl,bshe->bhle", ksin, v1)
+    return out, NFFTCache(s_cos=cache.s_cos + s_cos,
+                          s_sin=cache.s_sin + s_sin)
+
+
+def nfft_attention_decode(params: dict, x: Array, cfg: ArchConfig,
+                          cache: NFFTCache) -> tuple[Array, NFFTCache]:
+    """O(N^d) decode step on the constant-size cache.  x: (b, 1, d)."""
+    nc = cfg.nfft_attention
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.head_dim_eff
+    freqs = jnp.asarray(lattice_frequencies(nc.bandwidth, nc.feature_dim))
+    bhat = jnp.asarray(kernel_coefficients(nc.bandwidth, nc.feature_dim,
+                                           nc.sigma))
+    qf, kf, v = _features(params, x, cfg)  # (b,1,h,*)
+    kcos, ksin = phase_features(kf[:, 0], freqs)  # (b,h,L)
+    v1 = jnp.concatenate([v[:, 0].astype(jnp.float32),
+                          jnp.ones((b, h, 1), jnp.float32)], -1)
+    cache = NFFTCache(
+        s_cos=cache.s_cos + kcos[..., None] * v1[:, :, None, :],
+        s_sin=cache.s_sin + ksin[..., None] * v1[:, :, None, :])
+
+    qcos, qsin = phase_features(qf[:, 0], freqs)  # (b,h,L)
+    total = (jnp.einsum("bhl,bhle->bhe", qcos, bhat[:, None] * cache.s_cos)
+             + jnp.einsum("bhl,bhle->bhe", qsin, bhat[:, None] * cache.s_sin))
+    num, den = total[..., :hd], total[..., hd:]
+    out = (num / jnp.maximum(den, 1e-6)).reshape(b, 1, h * hd)
+    return out.astype(x.dtype) @ params["wo"], cache

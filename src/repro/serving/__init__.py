@@ -1,0 +1,3 @@
+"""Serving: batched prefill+decode engine with continuous batching."""
+
+from repro.serving.engine import ServeEngine, Request  # noqa: F401

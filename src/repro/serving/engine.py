@@ -1,0 +1,153 @@
+"""Batched serving engine with continuous batching.
+
+A fixed-size decode batch of ``slots``; requests queue up, prefill runs
+per-request (cache written into the request's slot), decode steps run for
+the whole batch every tick with per-slot positions.  Finished slots (EOS or
+max tokens) are recycled immediately — the decode batch never drains.
+
+The decode step is the same jitted ``forward_decode`` the dry-run lowers;
+per-slot positions exercise the position-masked cache attention, so a batch
+can mix requests at wildly different progress (the static-shape analogue of
+paged attention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: list  # prompt token ids
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_seq: int = 256, greedy: bool = True):
+        assert cfg.frontend == "none", "engine serves token-only archs"
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_seq = slots, max_seq
+        self.caches = M.init_caches(cfg, slots, max_seq)
+        self.pos = np.zeros((slots,), np.int32)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.last_token = np.zeros((slots, 1), np.int32)
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.greedy = greedy
+
+        self._decode = jax.jit(
+            lambda p, t, q, c: M.forward_decode(p, cfg, t, q, c))
+        # one prefill per prompt length bucket (static shapes)
+        self._prefill_cache: dict[int, Callable] = {}
+
+    # -- internals ----------------------------------------------------------
+    def _prefill_fn(self, length: int):
+        if length not in self._prefill_cache:
+            cfg = self.cfg
+
+            def fn(params, tokens, caches):
+                return M.forward_prefill(params, cfg, {"tokens": tokens},
+                                         caches)
+            self._prefill_cache[length] = jax.jit(fn)
+        return self._prefill_cache[length]
+
+    @staticmethod
+    def _batch_axis(path) -> int:
+        """Batch axis per cache leaf: period-stacked leaves ('stack' subtree)
+        carry a leading n_periods axis, so batch is axis 1 there."""
+        names = [str(p.key) for p in path
+                 if isinstance(p, jax.tree_util.DictKey)]
+        return 1 if "stack" in names else 0
+
+    def _slot_caches(self, slot: int):
+        """View of one slot's caches as a batch-1 pytree."""
+        return jax.tree_util.tree_map_with_path(
+            lambda path, a: jax.lax.slice_in_dim(
+                a, slot, slot + 1, axis=self._batch_axis(path)),
+            self.caches)
+
+    def _write_slot(self, slot: int, sub):
+        def write(path, full, one):
+            ax = self._batch_axis(path)
+            idx = tuple(slice(slot, slot + 1) if i == ax else slice(None)
+                        for i in range(full.ndim))
+            return full.at[idx].set(one.astype(full.dtype))
+        self.caches = jax.tree_util.tree_map_with_path(
+            write, self.caches, sub)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None:
+                continue
+            try:
+                req = self.queue.get_nowait()
+            except queue.Empty:
+                return
+            prompt = np.asarray(req.tokens, np.int32)[None, :]
+            # zero the slot's cache then prefill into it
+            zeroed = jax.tree.map(jnp.zeros_like, self._slot_caches(slot))
+            logits, sub = self._prefill_fn(prompt.shape[1])(
+                self.params, jnp.asarray(prompt), zeroed)
+            self._write_slot(slot, sub)
+            nxt = self._sample(logits[:, -1, :])
+            self.active[slot] = req
+            self.pos[slot] = prompt.shape[1]
+            self.last_token[slot, 0] = nxt
+            req.output.append(int(nxt))
+
+    def _sample(self, logits: Array) -> int:
+        return int(jnp.argmax(logits, axis=-1)[0])
+
+    # -- public -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.put(req)
+
+    def step(self) -> int:
+        """One engine tick: admit waiting requests, one decode step for the
+        whole batch, retire finished slots.  Returns #active slots."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.last_token),
+            jnp.asarray(self.pos), self.caches)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        n_active = 0
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.output.append(tok)
+            self.pos[slot] += 1
+            self.last_token[slot, 0] = tok
+            finished = (len(req.output) >= req.max_new_tokens
+                        or (req.eos_id is not None and tok == req.eos_id)
+                        or self.pos[slot] >= self.max_seq - 1)
+            if finished:
+                req.done = True
+                self.active[slot] = None
+            else:
+                n_active += 1
+        return n_active
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            n = self.step()
+            if n == 0 and self.queue.empty():
+                return

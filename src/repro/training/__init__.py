@@ -1,0 +1,11 @@
+"""Training substrate: optimizers, train step, checkpointing, fault tolerance."""
+
+from repro.training.optimizer import (  # noqa: F401
+    OptimizerConfig, init_optimizer, make_schedule,
+)
+from repro.training.train_loop import (  # noqa: F401
+    TrainConfig, TrainState, init_train_state, make_train_step,
+)
+from repro.training.checkpoint import (  # noqa: F401
+    latest_step, restore_checkpoint, save_checkpoint,
+)

@@ -1,0 +1,197 @@
+"""Optimizers: AdamW (fp32 master + moments) and Adafactor (factored second
+moment, no master) — the latter is what makes the 405B/671B configs fit the
+v5e 16 GB HBM budget (DESIGN.md §7: 2.1 bytes/param state vs Adam's 12).
+
+Pure-pytree implementation (no optax dependency): ``init(params) -> state``,
+``update(grads, state, params, lr) -> (new_params, new_state)``.  All state
+leaves inherit the parameter sharding (same tree structure), so ZeRO-style
+optimizer-state sharding falls out of the param sharding rules for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # 'adamw' | 'adafactor'
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    # adafactor
+    decay_offset: float = 1e-30
+    factored_min_dim: int = 128
+
+
+def make_schedule(cfg: OptimizerConfig):
+    def schedule(step: Array) -> Array:
+        step = step.astype(jnp.float32)
+        # (step+1)/warmup: step 0 must have a nonzero LR or it is a no-op
+        warm = cfg.peak_lr * (step + 1.0) / jnp.maximum(cfg.warmup_steps, 1)
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+    return schedule
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    master: Any  # fp32 master params
+    m: Any
+    v: Any
+
+
+def _adamw_init(params) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(master=jax.tree.map(f32, params),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def _adamw_update(cfg: OptimizerConfig, grads, state: AdamWState, params,
+                  lr: Array, step: Array):
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(jnp.float32) + 1.0
+    corr1 = 1.0 - b1 ** t
+    corr2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / corr1) / (jnp.sqrt(v / corr2) + cfg.eps)
+        if master.ndim >= 2:  # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * master
+        master = master - lr * u
+        return m, v, master
+
+    out = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda mast, p: mast.astype(p.dtype), master,
+                              params)
+    return new_params, AdamWState(master=master, m=m, v=v)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    v_row: Any  # factored second moment (rows) or full v for small leaves
+    v_col: Any
+    v_full: Any
+
+
+def _factored(p, min_dim: int) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= min_dim and p.shape[-2] >= min_dim
+
+
+def _adafactor_init(params, cfg: OptimizerConfig) -> AdafactorState:
+    def row(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32)
+                if _factored(p, cfg.factored_min_dim) else jnp.zeros((), jnp.float32))
+
+    def col(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p, cfg.factored_min_dim) else jnp.zeros((), jnp.float32))
+
+    def full(p):
+        return (jnp.zeros((), jnp.float32)
+                if _factored(p, cfg.factored_min_dim)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    return AdafactorState(v_row=jax.tree.map(row, params),
+                          v_col=jax.tree.map(col, params),
+                          v_full=jax.tree.map(full, params))
+
+
+def _adafactor_update(cfg: OptimizerConfig, grads, state: AdafactorState,
+                      params, lr: Array, step: Array):
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t ** (-0.8)  # Shazeer-Stern decay schedule
+
+    def upd(g, vr, vc, vf, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.decay_offset
+        if _factored(p, cfg.factored_min_dim):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                     + 1e-30)
+        else:
+            vf = beta2 * vf + (1 - beta2) * g2
+            u = g / (jnp.sqrt(vf) + 1e-30)
+        # update clipping (RMS <= 1) stabilizes bf16-weight training
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return vr, vc, vf, new_p
+
+    out = jax.tree.map(upd, grads, state.v_row, state.v_col, state.v_full,
+                       params)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(3), AdafactorState(v_row=pick(0), v_col=pick(1),
+                                   v_full=pick(2))
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+class Optimizer(NamedTuple):
+    init: Any
+    update: Any  # (grads, state, params, lr, step) -> (params, state)
+    config: OptimizerConfig
+
+
+def init_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "adamw":
+        return Optimizer(
+            init=_adamw_init,
+            update=lambda g, s, p, lr, step: _adamw_update(cfg, g, s, p, lr, step),
+            config=cfg)
+    if cfg.name == "adafactor":
+        return Optimizer(
+            init=lambda p: _adafactor_init(p, cfg),
+            update=lambda g, s, p, lr, step: _adafactor_update(cfg, g, s, p, lr, step),
+            config=cfg)
+    raise ValueError(cfg.name)

@@ -1,0 +1,122 @@
+"""Train-step factory: microbatched grad accumulation, clipping, optional
+int8 error-feedback gradient compression, metrics.
+
+The returned ``train_step(state, batch)`` is a single jittable function —
+the dry-run lowers exactly this function on the production mesh.  Gradient
+accumulation runs as a ``lax.scan`` over microbatches so the activation
+footprint is one microbatch regardless of the global batch; the fp32
+gradient accumulator inherits the (fully sharded) parameter sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.compression import (
+    CompressionState, apply_error_feedback, init_compression_state)
+from repro.models import model as model_mod
+from repro.training.optimizer import (
+    Optimizer, OptimizerConfig, clip_by_global_norm, init_optimizer,
+    make_schedule)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    num_microbatches: int = 1
+    compress_grads: bool = False
+    remat: bool = True
+
+    @staticmethod
+    def for_arch(arch: ArchConfig, **overrides) -> "TrainConfig":
+        """Production defaults: Adafactor for >=100B-param archs."""
+        big = arch.param_count() >= 100e9
+        opt = OptimizerConfig(name="adafactor" if big else "adamw")
+        base = TrainConfig(optimizer=opt)
+        return dataclasses.replace(base, **overrides)
+
+
+class TrainState(NamedTuple):
+    step: Array
+    params: Any
+    opt_state: Any
+    ef_state: Optional[CompressionState]  # error-feedback residuals
+
+
+def init_train_state(key: Array, cfg: ArchConfig,
+                     tc: TrainConfig) -> TrainState:
+    params = model_mod.init_params(key, cfg)
+    opt = init_optimizer(tc.optimizer)
+    opt_state = opt.init(params)
+    ef = (init_compression_state(params) if tc.compress_grads else None)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt_state=opt_state, ef_state=ef)
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ArchConfig, tc: TrainConfig):
+    opt = init_optimizer(tc.optimizer)
+    schedule = make_schedule(tc.optimizer)
+
+    def loss_fn(params, microbatch):
+        loss, metrics = model_mod.forward_train(params, cfg, microbatch,
+                                                remat=tc.remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+
+        if tc.num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = _split_microbatches(batch, tc.num_microbatches)
+
+            def acc_body(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), micro)
+            inv = 1.0 / tc.num_microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss_sum * inv
+            metrics = {"loss": loss}
+
+        ef_state = state.ef_state
+        if tc.compress_grads:
+            grads, ef_state = apply_error_feedback(grads, ef_state)
+
+        grads, gnorm = clip_by_global_norm(grads, tc.optimizer.clip_norm)
+        lr = schedule(state.step)
+        new_params, new_opt = opt.update(grads, state.opt_state, params, lr,
+                                         state.step)
+        metrics = dict(metrics)
+        metrics.update(grad_norm=gnorm, lr=lr, loss=loss)
+        new_state = TrainState(step=state.step + 1, params=new_params,
+                               opt_state=new_opt, ef_state=ef_state)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,11 @@
+"""Shared test configuration.
+
+NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
+benchmarks must see the single real CPU device.  Multi-device sharding tests
+spawn subprocesses with their own XLA_FLAGS (see tests/test_distributed.py).
+"""
+
+import jax
+
+# The paper's accuracy claims (1e-14 eigenvalue errors) require float64.
+jax.config.update("jax_enable_x64", True)

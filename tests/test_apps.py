@@ -1,0 +1,111 @@
+"""End-to-end graph applications (paper Section 6.2/6.3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FastsumParams, SETUP_2, make_kernel, make_normalized_adjacency
+from repro.data import crescent_fullmoon, gaussian_blobs, spiral, synthetic_image
+from repro.graph import (
+    allen_cahn_multiclass, clustering_agreement, kernel_ssl_cg, kernel_ssl_eig,
+    krr_fit, krr_predict, krr_predict_direct, make_training_vector,
+    spectral_clustering,
+)
+from repro.core.lanczos import eigsh
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_spectral_clustering_blobs():
+    pts, labs = gaussian_blobs(1200, n_classes=4, d=3, spread=8.0, seed=3)
+    op = make_normalized_adjacency(make_kernel("gaussian", sigma=3.0),
+                                   jnp.asarray(pts), SETUP_2)
+    sc = spectral_clustering(op, 4, key=KEY)
+    assert clustering_agreement(labs, sc.assignments, 4) > 0.95
+
+
+def test_spectral_clustering_image():
+    """Fig. 5 analogue: segment a synthetic RGB image by color-channel graph."""
+    img, lab = synthetic_image(40, 60, noise=6.0, seed=0)
+    pixels = jnp.asarray(img.reshape(-1, 3))
+    op = make_normalized_adjacency(make_kernel("gaussian", sigma=90.0),
+                                   pixels, FastsumParams(n_bandwidth=16, m=2, p=2, eps_b=0.125))
+    sc = spectral_clustering(op, 4, key=KEY)
+    agree = clustering_agreement(lab.reshape(-1), sc.assignments, 4)
+    assert agree > 0.9, agree
+
+
+def test_phase_field_ssl():
+    """Fig. 6 analogue: multiclass Allen-Cahn on Gaussian-blob data."""
+    pts, labs = gaussian_blobs(1500, n_classes=5, d=3, spread=7.0, seed=2)
+    op = make_normalized_adjacency(make_kernel("gaussian", sigma=3.5),
+                                   jnp.asarray(pts), SETUP_2)
+    pred = allen_cahn_multiclass(op, jnp.asarray(labs), 5, 5, k=5, key=KEY)
+    acc = float(jnp.mean(pred == jnp.asarray(labs)))
+    assert acc > 0.9, acc
+
+
+def test_kernel_ssl():
+    """Fig. 7 analogue: crescent-fullmoon misclassification ~ paper levels."""
+    pts, labs = crescent_fullmoon(4000, seed=1)
+    op = make_normalized_adjacency(make_kernel("gaussian", sigma=0.5),
+                                   jnp.asarray(pts),
+                                   FastsumParams(n_bandwidth=128, m=4, eps_b=0.0))
+    f, _ = make_training_vector(jnp.asarray(labs), 25, 2, key=KEY,
+                                positive_class=1)
+    res = kernel_ssl_cg(op, f, beta=1e3)
+    assert bool(res.converged)
+    pred = (res.u > 0).astype(np.int32)
+    mis = float(jnp.mean(pred != jnp.asarray(labs)))
+    assert mis < 0.02, mis
+
+
+def test_kernel_ssl_laplacian_rbf():
+    """Fig. 8: the Laplacian RBF kernel gives similar classification."""
+    pts, labs = crescent_fullmoon(3000, seed=2)
+    op = make_normalized_adjacency(make_kernel("laplacian_rbf", sigma=0.35),
+                                   jnp.asarray(pts),
+                                   FastsumParams(n_bandwidth=256, m=3, eps_b=0.0))
+    f, _ = make_training_vector(jnp.asarray(labs), 25, 2, key=KEY,
+                                positive_class=1)
+    res = kernel_ssl_cg(op, f, beta=1e3)
+    pred = (res.u > 0).astype(np.int32)
+    mis = float(jnp.mean(pred != jnp.asarray(labs)))
+    assert mis < 0.05, mis
+
+
+def test_kernel_ssl_eig_matches_cg():
+    """Truncated-eigenbasis solve approximates the CG solve (Section 6.2.3)."""
+    pts, labs = crescent_fullmoon(2000, seed=3)
+    op = make_normalized_adjacency(make_kernel("gaussian", sigma=0.8),
+                                   jnp.asarray(pts),
+                                   FastsumParams(n_bandwidth=128, m=4, eps_b=0.0))
+    f, _ = make_training_vector(jnp.asarray(labs), 25, 2, key=KEY,
+                                positive_class=1)
+    beta = 1e3
+    res_cg = kernel_ssl_cg(op, f, beta=beta, tol=1e-8)
+    eig = eigsh(op.matvec, op.n, 20, num_iters=100, key=KEY)
+    u_eig = kernel_ssl_eig(eig.eigenvalues, eig.eigenvectors, f, beta)
+    pred_cg = np.asarray(res_cg.u > 0)
+    pred_eig = np.asarray(u_eig > 0)
+    assert float(np.mean(pred_cg == pred_eig)) > 0.97
+
+
+def test_krr_gaussian_and_inverse_multiquadric():
+    rng = np.random.default_rng(5)
+    xtr = rng.uniform(-3, 3, (600, 2))
+    ytr = np.sign(xtr[:, 0] ** 2 + xtr[:, 1] ** 2 - 4.0)
+    xte = rng.uniform(-3, 3, (300, 2))
+    yte = np.sign(xte[:, 0] ** 2 + xte[:, 1] ** 2 - 4.0)
+    for kern, params in [
+        (make_kernel("gaussian", sigma=1.0), FastsumParams(n_bandwidth=64, m=4, eps_b=0.0)),
+        (make_kernel("inverse_multiquadric", c=1.0), FastsumParams(n_bandwidth=128, m=5)),
+    ]:
+        model = krr_fit(kern, jnp.asarray(xtr), jnp.asarray(ytr), 1e-2, params)
+        assert bool(model.converged)
+        pred = krr_predict(model, jnp.asarray(xte))
+        acc = float(np.mean(np.sign(np.asarray(pred)) == yte))
+        assert acc > 0.95, (kern.name, acc)
+        # fast prediction matches dense prediction
+        pred_d = krr_predict_direct(model, jnp.asarray(xte))
+        assert float(jnp.max(jnp.abs(pred - pred_d))) < 1e-2

@@ -1,0 +1,80 @@
+"""End-to-end dry-run machinery test on a small forced mesh (subprocess).
+
+Exercises launch/steps.py + launch/dryrun.py + the loop-aware analyzer on a
+reduced-config train cell with 16 host devices — the same code path the
+512-device production dry-run uses, cheap enough for CI.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_reduced_cell_lower_compile_roofline():
+    code = """
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.configs import get_config, reduced_config
+        from repro.launch import hlo_analysis as H
+        from repro.launch.steps import lower_cell
+        from repro.training.train_loop import TrainConfig
+
+        cfg = reduced_config(get_config("granite-3-2b"), seq_len=64,
+                             global_batch=8)
+        # give the smoke config its real shape list entry
+        shape = cfg.shapes[0]
+        mesh = jax.make_mesh((4, 4), ("data", "model"))
+        tc = TrainConfig(num_microbatches=2)
+        lowered, kind = lower_cell(cfg, shape, mesh, tc=tc)
+        assert kind == "train"
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        assert ma is not None
+        stats = H.analyze(compiled.as_text(), pod_boundary=8)
+        # scan over 4 layers x 2 microbatches -> trip counts visible
+        assert any(t == 4 for t in stats.while_trip_counts), \\
+            stats.while_trip_counts
+        assert stats.flops > 0
+        assert stats.collective_bytes > 0  # TP/FSDP collectives exist
+        print("dryrun cell OK", stats.while_trip_counts,
+              f"{stats.flops:.3e}")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env["PYTHONPATH"] = REPO_SRC
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"
+
+
+def test_decode_cell_serve_sharding():
+    code = """
+        import dataclasses, jax
+        from repro.configs import get_config, reduced_config
+        from repro.launch.steps import lower_cell, _serve_replicated
+        from repro.training.train_loop import TrainConfig
+
+        cfg = reduced_config(get_config("granite-3-2b"), seq_len=64,
+                             global_batch=8)
+        mesh = jax.make_mesh((4, 4), ("data", "model"))
+        assert _serve_replicated(cfg, mesh)  # tiny model: TP-resident
+        decode = [s for s in cfg.shapes if s.kind == "decode"
+                  and not s.skip_reason][0]
+        lowered, kind = lower_cell(cfg, decode, mesh,
+                                   tc=TrainConfig(num_microbatches=1))
+        assert kind == "decode"
+        lowered.compile()
+        print("decode cell OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env["PYTHONPATH"] = REPO_SRC
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"

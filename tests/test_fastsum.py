@@ -1,0 +1,113 @@
+"""Algorithm 3.1/3.2 vs dense oracles, for all four paper kernels."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FastsumParams, SETUP_1, SETUP_2, SETUP_3, dense_normalized_adjacency,
+    dense_weight_matrix, direct_matvec_tiled, make_fastsum, make_kernel,
+    make_normalized_adjacency,
+)
+
+RNG = np.random.default_rng(7)
+N_PTS = 600
+POINTS_3D = jnp.asarray(RNG.normal(size=(N_PTS, 3)) * 3.0)
+POINTS_2D = jnp.asarray(RNG.uniform(-8, 8, size=(N_PTS, 2)))
+X = jnp.asarray(RNG.normal(size=(N_PTS,)))
+
+
+@pytest.mark.parametrize("setup,tol", [(SETUP_1, 5e-2), (SETUP_2, 1e-5), (SETUP_3, 1e-10)])
+def test_gaussian_matvec_accuracy_tiers(setup, tol):
+    kern = make_kernel("gaussian", sigma=3.5)
+    ref = dense_weight_matrix(kern, POINTS_3D) @ X
+    fs = make_fastsum(kern, POINTS_3D, setup)
+    out = fs.matvec(X)
+    rel = float(jnp.max(jnp.abs(out - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel < tol, rel
+
+
+@pytest.mark.parametrize("kname,kw,params,tol", [
+    ("laplacian_rbf", dict(sigma=2.0), FastsumParams(n_bandwidth=256, m=4, eps_b=0.0), 5e-2),
+    ("multiquadric", dict(c=1.0), FastsumParams(n_bandwidth=128, m=5), 5e-4),
+    ("inverse_multiquadric", dict(c=1.0), FastsumParams(n_bandwidth=128, m=5), 5e-4),
+])
+def test_other_kernels(kname, kw, params, tol):
+    kern = make_kernel(kname, **kw)
+    ref = dense_weight_matrix(kern, POINTS_2D) @ X
+    fs = make_fastsum(kern, POINTS_2D, params)
+    out = fs.matvec(X)
+    rel = float(jnp.max(jnp.abs(out - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel < tol, rel
+
+
+def test_degrees_match_dense():
+    kern = make_kernel("gaussian", sigma=3.5)
+    fs = make_fastsum(kern, POINTS_3D, SETUP_2)
+    ref = jnp.sum(dense_weight_matrix(kern, POINTS_3D), axis=1)
+    rel = float(jnp.max(jnp.abs(fs.degrees() - ref)) / jnp.max(ref))
+    assert rel < 1e-5
+
+
+def test_normalized_adjacency_matches_dense():
+    kern = make_kernel("gaussian", sigma=3.5)
+    op = make_normalized_adjacency(kern, POINTS_3D, SETUP_3)
+    a_ref = dense_normalized_adjacency(kern, POINTS_3D)
+    np.testing.assert_allclose(np.asarray(op.matvec(X)), np.asarray(a_ref @ X),
+                               rtol=0, atol=1e-9)
+
+
+def test_operator_exact_symmetry():
+    """F diag(b) F^H structure makes the operator exactly Hermitian."""
+    kern = make_kernel("gaussian", sigma=3.5)
+    op = make_normalized_adjacency(kern, POINTS_3D, SETUP_1)
+    y = jnp.asarray(RNG.normal(size=(N_PTS,)))
+    lhs = float(jnp.vdot(op.matvec(X), y))
+    rhs = float(jnp.vdot(X, op.matvec(y)))
+    assert abs(lhs - rhs) / abs(lhs) < 1e-13
+
+
+def test_batched_matvec_matches_loop():
+    kern = make_kernel("gaussian", sigma=3.5)
+    fs = make_fastsum(kern, POINTS_3D, SETUP_1)
+    cols = jnp.asarray(RNG.normal(size=(N_PTS, 4)))
+    batched = fs.matvec(cols)
+    for i in range(4):
+        np.testing.assert_allclose(np.asarray(batched[:, i]),
+                                   np.asarray(fs.matvec(cols[:, i])),
+                                   rtol=1e-11, atol=1e-11)
+
+
+def test_separate_targets():
+    kern = make_kernel("gaussian", sigma=3.5)
+    tgt = jnp.asarray(RNG.normal(size=(100, 3)) * 3.0)
+    fs = make_fastsum(kern, POINTS_3D, SETUP_2, target_points=tgt)
+    out = fs.matvec_tilde(X)
+    diff = tgt[:, None, :] - POINTS_3D[None, :, :]
+    ref = kern.phi(jnp.linalg.norm(diff, axis=-1)) @ X
+    rel = float(jnp.max(jnp.abs(out - ref)) / jnp.max(jnp.abs(ref)))
+    assert rel < 1e-5, rel
+
+
+def test_direct_matvec_tiled_matches_dense():
+    kern = make_kernel("gaussian", sigma=3.5)
+    ref = dense_weight_matrix(kern, POINTS_3D) @ X
+    out = direct_matvec_tiled(kern, POINTS_3D, X, tile=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(a=st.floats(-3, 3), b=st.floats(-3, 3), seed=st.integers(0, 100))
+def test_linearity_property(a, b, seed):
+    """Algorithm 3.1 is a deterministic linear operator (paper Section 3)."""
+    kern = make_kernel("gaussian", sigma=3.5)
+    fs = make_fastsum(kern, POINTS_3D, SETUP_1)
+    r = np.random.default_rng(seed)
+    x1 = jnp.asarray(r.normal(size=(N_PTS,)))
+    x2 = jnp.asarray(r.normal(size=(N_PTS,)))
+    lhs = fs.matvec(a * x1 + b * x2)
+    rhs = a * fs.matvec(x1) + b * fs.matvec(x2)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-9, atol=1e-9)

@@ -1,0 +1,134 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(11)
+
+
+def _tol(dtype):
+    return 2e-5 if dtype == jnp.float32 else 1e-12
+
+
+# ---------------------------------------------------------------- kernel_matvec
+@pytest.mark.parametrize("n,d,c", [(64, 1, 1), (200, 2, 1), (300, 3, 2),
+                                   (257, 3, 1), (128, 2, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_kernel_matvec_shapes(n, d, c, dtype):
+    pts = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+    x = jnp.asarray(RNG.normal(size=(n, c)), dtype)
+    out = ops.kernel_matvec(pts, pts, x, kernel_name="gaussian", param=1.5,
+                            tile_j=64, tile_i=128, interpret=True)
+    want = ref.kernel_matvec_ref(pts, pts, x, "gaussian", 1.5)
+    rel = float(jnp.max(jnp.abs(out - want)) / jnp.max(jnp.abs(want)))
+    assert rel < _tol(dtype), rel
+
+
+@pytest.mark.parametrize("kname,param", [
+    ("gaussian", 2.0), ("laplacian_rbf", 0.7),
+    ("multiquadric", 1.0), ("inverse_multiquadric", 1.0)])
+def test_kernel_matvec_all_kernels(kname, param):
+    pts = jnp.asarray(RNG.normal(size=(200, 3)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(200,)), jnp.float32)
+    out = ops.kernel_matvec(pts, pts, x, kernel_name=kname, param=param,
+                            tile_j=64, tile_i=64, interpret=True)
+    want = ref.kernel_matvec_ref(pts, pts, x, kname, param)
+    rel = float(jnp.max(jnp.abs(out - want)) / jnp.max(jnp.abs(want)))
+    assert rel < 2e-5, rel
+
+
+def test_kernel_matvec_rectangular():
+    """Separate source/target sets (Nyström W_XY blocks, KRR prediction)."""
+    a = jnp.asarray(RNG.normal(size=(150, 2)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(220, 2)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(220,)), jnp.float32)
+    out = ops.kernel_matvec(a, b, x, kernel_name="gaussian", param=1.0,
+                            zero_diagonal=False, tile_j=64, tile_i=64,
+                            interpret=True)
+    want = ref.kernel_matvec_ref(a, b, x, "gaussian", 1.0, zero_diagonal=False)
+    rel = float(jnp.max(jnp.abs(out - want)) / jnp.max(jnp.abs(want)))
+    assert rel < 2e-5, rel
+
+
+# --------------------------------------------------------------- window kernels
+@pytest.mark.parametrize("n,taps,grid", [(100, 9, 512), (500, 25, 4096),
+                                         (333, 125, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_window_gather_sweep(n, taps, grid, dtype):
+    idx = jnp.asarray(RNG.integers(0, grid, (n, taps)), jnp.int32)
+    w = jnp.asarray(RNG.normal(size=(n, taps)), dtype)
+    g = jnp.asarray(RNG.normal(size=(grid,)), dtype)
+    out = ops.window_gather(g, idx, w, node_tile=128, interpret=True)
+    want = ref.window_gather_ref(g, idx, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5 if dtype == jnp.float32 else 1e-12,
+                               atol=1e-5 if dtype == jnp.float32 else 1e-12)
+
+
+@pytest.mark.parametrize("n,taps,grid", [(100, 9, 512), (400, 25, 2048)])
+def test_window_spread_sweep(n, taps, grid):
+    idx = jnp.asarray(RNG.integers(0, grid, (n, taps)), jnp.int32)
+    w = jnp.asarray(RNG.normal(size=(n, taps)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    out = ops.window_spread(x, idx, w, grid_size=grid, node_tile=128,
+                            interpret=True)
+    want = ref.window_spread_ref(x, idx, w, grid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_spread_gather_adjoint():
+    """<gather(g), x> == <g, spread(x)> — the NFFT adjointness at tile level."""
+    n, taps, grid = 256, 27, 1024
+    idx = jnp.asarray(RNG.integers(0, grid, (n, taps)), jnp.int32)
+    w = jnp.asarray(RNG.normal(size=(n, taps)), jnp.float64)
+    g = jnp.asarray(RNG.normal(size=(grid,)), jnp.float64)
+    x = jnp.asarray(RNG.normal(size=(n,)), jnp.float64)
+    lhs = float(jnp.vdot(ops.window_gather(g, idx, w, interpret=True), x))
+    rhs = float(jnp.vdot(g, ops.window_spread(x, idx, w, grid_size=grid,
+                                              interpret=True)))
+    assert abs(lhs - rhs) / abs(lhs) < 1e-12
+
+
+# -------------------------------------------------------------- flash attention
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,dh", [
+    (2, 4, 2, 128, 128, 64),
+    (1, 8, 1, 100, 100, 64),   # MQA, ragged seq
+    (1, 2, 2, 64, 192, 32),    # cross-length
+    (1, 16, 8, 96, 96, 128),   # GQA group 2
+])
+@pytest.mark.parametrize("causal", [False, True])
+def test_flash_attention_sweep(b, hq, hkv, sq, sk, dh, causal):
+    q = jnp.asarray(RNG.normal(size=(b, hq, sq, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, sk, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, sk, dh)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    assert float(jnp.max(jnp.abs(out - want))) < 2e-5
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(size=(1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                              interpret=True)
+    want = ref.flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                                   v.astype(jnp.float32), causal=True)
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32) - want))) < 5e-2
+
+
+def test_flash_attention_decode_alignment():
+    """Decode shape: one query against a long KV cache, causal offset."""
+    q = jnp.asarray(RNG.normal(size=(2, 4, 1, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 4, 256, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 4, 256, 64)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=8, block_k=64,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    assert float(jnp.max(jnp.abs(out - want))) < 2e-5

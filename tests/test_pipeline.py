@@ -1,0 +1,114 @@
+"""Data-pipeline determinism + MoE routing correctness tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced_config
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.data.pipeline import Prefetcher, batch_for_step
+from repro.models.mlp import init_moe, moe_forward
+
+
+def test_batch_deterministic_per_step():
+    cfg = reduced_config(get_config("granite-3-2b"))
+    a = batch_for_step(cfg, cfg.shapes[0], 5)
+    b = batch_for_step(cfg, cfg.shapes[0], 5)
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(x, y)
+    c = batch_for_step(cfg, cfg.shapes[0], 6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = reduced_config(get_config("granite-3-2b"))
+    b = batch_for_step(cfg, cfg.shapes[0], 0)
+    # labels[t] = tokens[t+1] within the same underlying stream
+    assert b["tokens"].shape == b["labels"].shape
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_prefetcher_matches_direct():
+    cfg = reduced_config(get_config("granite-3-2b"))
+    pf = Prefetcher(cfg, cfg.shapes[0], start=0, depth=2)
+    try:
+        for step in range(4):
+            got = pf.get(step)
+            ref = batch_for_step(cfg, cfg.shapes[0], step)
+            np.testing.assert_array_equal(got["tokens"], ref["tokens"])
+    finally:
+        pf.close()
+
+
+def test_prefetcher_rewind_after_restart():
+    cfg = reduced_config(get_config("granite-3-2b"))
+    pf = Prefetcher(cfg, cfg.shapes[0], start=3, depth=2)
+    try:
+        pf.get(3)
+        pf.get(4)
+        # simulated restart rewind to step 3
+        got = pf.get(3)
+        ref = batch_for_step(cfg, cfg.shapes[0], 3)
+        np.testing.assert_array_equal(got["tokens"], ref["tokens"])
+    finally:
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# MoE routing correctness: gather/scatter routing == brute-force per-token
+# ---------------------------------------------------------------------------
+
+def _brute_force_moe(params, x, cfg):
+    """Apply each token to its top-k experts directly (no capacity)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_idx = jax.lax.top_k(probs, moe.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    outs = jnp.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        acc = jnp.zeros((d,), xt.dtype)
+        for j in range(moe.top_k):
+            e = int(top_idx[t, j])
+            h = xt[t] @ params["w_up"][e]
+            if "w_gate" in params:
+                h = jax.nn.silu(xt[t] @ params["w_gate"][e]) * h
+            acc = acc + top_p[t, j] * (h @ params["w_down"][e])
+        outs = outs.at[t].set(acc)
+    return outs.reshape(b, s, d)
+
+
+def test_moe_routing_matches_brute_force():
+    cfg = reduced_config(get_config("olmoe-1b-7b"))
+    # capacity large enough that nothing is dropped
+    moe = MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
+                    capacity_factor=8.0)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, moe=moe, d_model=8)
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 8), jnp.float32)
+    out, aux = moe_forward(params, x, cfg)
+    ref = _brute_force_moe(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+    assert float(aux) > 0
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 1000))
+def test_moe_capacity_drops_dont_crash(seed):
+    """Tiny capacity: overflowing tokens are dropped, output stays finite."""
+    cfg = reduced_config(get_config("olmoe-1b-7b"))
+    import dataclasses
+    moe = MoEConfig(num_experts=4, top_k=2, d_ff_expert=16,
+                    capacity_factor=0.3)
+    cfg = dataclasses.replace(cfg, moe=moe, d_model=8)
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 8, 8), jnp.float32)
+    out, aux = moe_forward(params, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,54 @@
+"""CG / MINRES vs numpy direct solves."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cg, minres
+
+
+def _spd(n, seed=0):
+    rng = np.random.default_rng(seed)
+    m = rng.normal(size=(n, n))
+    return jnp.asarray(m @ m.T + n * np.eye(n))
+
+
+def test_cg_spd():
+    a = _spd(120)
+    b = jnp.asarray(np.random.default_rng(1).normal(size=120))
+    sol = cg(lambda x: a @ x, b, tol=1e-12, maxiter=500)
+    assert bool(sol.converged)
+    ref = np.linalg.solve(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(sol.x), ref, rtol=1e-8, atol=1e-8)
+
+
+def test_cg_preconditioned():
+    a = _spd(120, seed=2)
+    d = jnp.diag(a)
+    b = jnp.asarray(np.random.default_rng(3).normal(size=120))
+    sol_pc = cg(lambda x: a @ x, b, tol=1e-12, maxiter=500,
+                preconditioner=lambda r: r / d)
+    sol = cg(lambda x: a @ x, b, tol=1e-12, maxiter=500)
+    assert bool(sol_pc.converged)
+    np.testing.assert_allclose(np.asarray(sol_pc.x), np.asarray(sol.x),
+                               rtol=1e-7, atol=1e-7)
+
+
+def test_minres_spd_matches_cg():
+    a = _spd(100, seed=4)
+    b = jnp.asarray(np.random.default_rng(5).normal(size=100))
+    s1 = cg(lambda x: a @ x, b, tol=1e-12, maxiter=500)
+    s2 = minres(lambda x: a @ x, b, tol=1e-12, maxiter=500)
+    np.testing.assert_allclose(np.asarray(s1.x), np.asarray(s2.x),
+                               rtol=1e-7, atol=1e-7)
+
+
+def test_minres_indefinite():
+    rng = np.random.default_rng(6)
+    n = 100
+    m = rng.normal(size=(n, n))
+    a = jnp.asarray((m + m.T) / 2.0 + 0.5 * np.eye(n))  # symmetric indefinite
+    b = jnp.asarray(rng.normal(size=n))
+    sol = minres(lambda x: a @ x, b, tol=1e-10, maxiter=2000)
+    ref = np.linalg.solve(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(sol.x), ref, rtol=1e-5, atol=1e-5)
