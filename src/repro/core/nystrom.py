@@ -1,9 +1,11 @@
 """Nyström eigenvalue approximation (paper Section 5).
 
-Traditional Nyström (§5.1): sub-sample L nodes, build the blocks W_XX and
-W_XY explicitly, approximate W ≈ [W_XX; W_XY^T] W_XX^{-1} [W_XX W_XY], and
-extract a rank-L eigendecomposition of A_E via the paper's QR variant
-(QR of D_E^{-1/2}[W_XX W_XY]^T, then eigendecomposition of R W_XX^{-1} R^T).
+Traditional Nyström (§5.1): sub-sample L nodes, build the full-kernel blocks
+W̃_XX and W̃_XY explicitly, approximate W̃ ≈ C^T W̃_XX^{-1} C with
+C = [W̃_XX W̃_XY], recover the zero-diagonal adjacency as
+W_E = W̃_E - diag(W̃_E), and extract the eigendecomposition of A_E via the
+paper's QR variant (QR of D_E^{-1/2} C^T, then eigendecomposition of
+R W̃_XX^{-1} R^T minus the span(Q)-projected diagonal correction).
 
 Hybrid Nyström-Gaussian-NFFT (Algorithm 5.1): randomized range finder
 Q = orth(A G) with the 2L matvecs A·G and A·Q computed *column-wise by the
@@ -31,21 +33,11 @@ class NystromResult(NamedTuple):
     eigenvectors: Array  # (n, k)
 
 
-def _kernel_block(kernel: Kernel, rows: Array, cols: Array,
-                  zero_diag_offset: int | None = None) -> Array:
-    """W block between row nodes and col nodes (zero diagonal if aligned).
-
-    ``zero_diag_offset``: if not None, entry (i, j) with ``i == j + offset``
-    is a true diagonal element of W and is zeroed.
-    """
+def _kernel_block(kernel: Kernel, rows: Array, cols: Array) -> Array:
+    """Full kernel block W̃ between row nodes and col nodes."""
     diff = rows[:, None, :] - cols[None, :, :]
     r = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
-    w = kernel.phi(r)
-    if zero_diag_offset is not None:
-        i = jnp.arange(rows.shape[0])[:, None]
-        j = jnp.arange(cols.shape[0])[None, :]
-        w = jnp.where(i == j + zero_diag_offset, 0.0, w)
-    return w
+    return kernel.phi(r)
 
 
 def nystrom_traditional(kernel: Kernel, points: Array, k: int, sample_size: int,
@@ -61,28 +53,37 @@ def nystrom_traditional(kernel: Kernel, points: Array, k: int, sample_size: int,
     pts = points[perm]
     x_pts, y_pts = pts[:l_size], pts[l_size:]
 
-    w_xx = _kernel_block(kernel, x_pts, x_pts, zero_diag_offset=0)
-    w_xy = _kernel_block(kernel, x_pts, y_pts)
+    # Nyström factorizes the *full* kernel matrix W̃ (SPD for the Gaussian):
+    # W̃_E = C^T W̃_XX^{-1} C with C = [W̃_XX  W̃_XY].  The zero-diagonal
+    # adjacency is recovered afterwards as W_E = W̃_E - diag(W̃_E); running
+    # Nyström directly on the indefinite zero-diagonal blocks (K - I) makes
+    # the middle inverse meaningless and the eigenvalues drift O(1).
+    wt_xx = _kernel_block(kernel, x_pts, x_pts)
+    wt_xy = _kernel_block(kernel, x_pts, y_pts)
+    c = jnp.concatenate([wt_xx, wt_xy], axis=1)  # (L, n)
+    wt_reg = wt_xx + jitter * jnp.eye(l_size, dtype=wt_xx.dtype)
+    # one LU factorization serves every solve (W̃_XX is not SPD for all
+    # kernels — multiquadrics are conditionally definite — so LU, not
+    # Cholesky)
+    lu = jax.scipy.linalg.lu_factor(wt_reg)
+    solve = lambda b: jax.scipy.linalg.lu_solve(lu, b)
 
-    # Degree approximation D_E = diag(W_E 1) with
-    # W_E = [W_XX; W_XY^T] W_XX^{-1} [W_XX W_XY]:
-    ones_x = jnp.sum(w_xx, axis=1) + jnp.sum(w_xy, axis=1)  # exact rows (X)
-    # rows in Y:  W_XY^T 1_X + W_XY^T W_XX^{-1} W_XY 1_Y
-    rhs = jnp.sum(w_xy, axis=1)  # W_XY 1_Y  (L,)
-    w_xx_reg = w_xx + jitter * jnp.eye(l_size, dtype=w_xx.dtype)
-    solve = lambda b: jnp.linalg.solve(w_xx_reg, b)
-    ones_y = w_xy.T @ jnp.ones((l_size,), w_xx.dtype) + w_xy.T @ solve(rhs)
-    deg = jnp.concatenate([ones_x, ones_y])
+    # diag(W̃_E)_i = c_i^T W̃_XX^{-1} c_i  and  deg = W_E 1, both O(n L^2).
+    sc = solve(c)  # W̃_XX^{-1} C
+    diag_e = jnp.sum(c * sc, axis=0)
+    deg = c.T @ (sc @ jnp.ones((n,), c.dtype)) - diag_e
     # The paper notes negative entries in D_E cannot be ruled out — that is
     # the traditional method's failure mode.  We keep the sign (sqrt of a
     # negative degree poisons the run) but clamp |.| >= tiny to avoid 0-div,
     # mirroring the observed "failed runs" behaviour honestly.
     inv_sqrt_deg = jnp.sign(deg) / jnp.sqrt(jnp.maximum(jnp.abs(deg), jnp.finfo(deg.dtype).tiny))
 
-    # QR variant:  C = D_E^{-1/2} [W_XX W_XY]^T   (n x L)
-    c = jnp.concatenate([w_xx, w_xy], axis=1).T * inv_sqrt_deg[:, None]
-    q_hat, r_hat = jnp.linalg.qr(c)  # n x L, L x L
-    middle = r_hat @ solve(r_hat.T)
+    # QR variant:  A_E = Q (R W̃_XX^{-1} R^T - Q^T Δ Q) Q^T with
+    # C D^{-1/2} = (QR)^T and Δ = D^{-1/2} diag(W̃_E) D^{-1/2}; the diagonal
+    # correction is projected onto span(Q) (exact up to (I - QQ^T) Δ).
+    q_hat, r_hat = jnp.linalg.qr((c * inv_sqrt_deg[None, :]).T)  # n x L, L x L
+    delta = diag_e * inv_sqrt_deg ** 2
+    middle = r_hat @ solve(r_hat.T) - q_hat.T @ (delta[:, None] * q_hat)
     middle = (middle + middle.T) / 2.0
     theta, u = jnp.linalg.eigh(middle)
     order = jnp.argsort(-theta)[:k]

@@ -1,0 +1,35 @@
+"""Distributed execution layer: sharding rules, the sharded Algorithm 3.1
+matvec, and int8 error-feedback gradient compression.
+
+Modules
+-------
+``sharding``
+    Named-sharding placement rules (FSDP over the ``("pod", "data")`` axes,
+    tensor parallelism over ``"model"``) consumed by ``launch/steps.py``.
+``fastsum_dist``
+    ``shard_map``-based distributed NFFT fast summation: the node dimension
+    is sharded, the small oversampled spectral grid is all-reduced once per
+    matvec (O(n/P) local work + O(M^d) communication).
+``compression``
+    Block-wise int8 quantization with error feedback for gradient
+    all-reduce (``compress_psum``) and per-step compression in the train
+    loop (``apply_error_feedback``).
+``compat``
+    ``shard_map`` import shim across jax versions (``check_rep`` vs
+    ``check_vma`` keyword, ``jax.experimental`` vs top-level export).
+"""
+
+from repro.dist.compat import shard_map
+from repro.dist.compression import (
+    BLOCK, CompressionState, apply_error_feedback, compress_decompress,
+    compress_psum, init_compression_state)
+from repro.dist.fastsum_dist import distributed_matvec_fn
+from repro.dist.sharding import (
+    FSDP_AXES, MODEL_AXIS, batch_specs, cache_specs, named, param_specs)
+
+__all__ = [
+    "BLOCK", "CompressionState", "FSDP_AXES", "MODEL_AXIS",
+    "apply_error_feedback", "batch_specs", "cache_specs",
+    "compress_decompress", "compress_psum", "distributed_matvec_fn",
+    "init_compression_state", "named", "param_specs", "shard_map",
+]

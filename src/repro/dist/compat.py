@@ -1,0 +1,25 @@
+"""shard_map across jax versions.
+
+jax moved ``shard_map`` from ``jax.experimental.shard_map`` to the top-level
+namespace and renamed the replication-check keyword from ``check_rep`` to
+``check_vma`` along the way.  Callers here (and the test suite) use this one
+wrapper so the same code runs on both API generations.
+"""
+
+from __future__ import annotations
+
+try:  # jax >= 0.6: top-level export, check_vma keyword
+    from jax import shard_map as _native_shard_map  # type: ignore[attr-defined]
+    _CHECK_KW = "check_vma"
+except ImportError:  # older jax: experimental module, check_rep keyword
+    from jax.experimental.shard_map import shard_map as _native_shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+              check_rep=None):
+    """``shard_map`` accepting either replication-check keyword spelling."""
+    check = check_vma if check_vma is not None else check_rep
+    kwargs = {} if check is None else {_CHECK_KW: check}
+    return _native_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)

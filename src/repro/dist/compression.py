@@ -1,0 +1,91 @@
+"""Block-wise int8 gradient compression with error feedback.
+
+Quantization: gradients are flattened, padded, and cut into blocks of
+``BLOCK`` elements; each block is scaled by ``max|block| / 127`` and rounded
+to int8, giving a per-element error of at most half a quantization step
+(``max|block| / 254``).  Error feedback (Seide et al. / Karimireddy et al.)
+adds the previous step's quantization residual to the gradient before
+compressing, so no signal is ever lost permanently — SGD with EF-compressed
+gradients converges to the uncompressed optimum.
+
+``compress_psum`` is the cross-replica reduction used under ``shard_map``:
+each shard quantizes locally (with its own residual), and the mean of the
+dequantized values is psum'd.  The values crossing the wire are
+int8-representable per block, but the collective itself still moves fp32 —
+routing the actual int8 payload through a custom collective is an open
+ROADMAP item.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+BLOCK = 256  # elements per quantization block (one scale per block)
+
+
+def _quantize(x: Array) -> tuple[Array, Array]:
+    """Flatten + pad ``x`` into (blocks, BLOCK) int8 with per-block scales."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % BLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.round(blocks / safe[:, None]).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: Array, scale: Array, n: int) -> Array:
+    """Inverse of :func:`_quantize`; returns the first ``n`` elements flat."""
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    return flat[:n]
+
+
+def compress_decompress(g: Array, resid: Array) -> tuple[Array, Array]:
+    """One error-feedback round: quantize ``g + resid``.
+
+    Returns ``(out, new_resid)`` with ``out + new_resid == g + resid``
+    exactly — the residual is precisely the signal the int8 lattice lost
+    this step, fed back into the next one.
+    """
+    total = g.astype(jnp.float32) + resid.astype(jnp.float32)
+    q, scale = _quantize(total)
+    out = _dequantize(q, scale, total.size).reshape(g.shape)
+    return out, total - out
+
+
+class CompressionState(NamedTuple):
+    residuals: Any  # pytree mirroring the grads, fp32
+
+
+def init_compression_state(params: Any) -> CompressionState:
+    return CompressionState(residuals=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def apply_error_feedback(
+        grads: Any, state: CompressionState) -> tuple[Any, CompressionState]:
+    """Compress a gradient pytree leaf-wise, carrying residuals in ``state``."""
+    g_leaves, tdef = jax.tree_util.tree_flatten(grads)
+    r_leaves = jax.tree_util.tree_leaves(state.residuals)
+    pairs = [compress_decompress(g, r) for g, r in zip(g_leaves, r_leaves)]
+    out = tdef.unflatten([p[0] for p in pairs])
+    resid = tdef.unflatten([p[1] for p in pairs])
+    return out, CompressionState(residuals=resid)
+
+
+def compress_psum(g: Array, axis_name, resid: Array) -> tuple[Array, Array]:
+    """Error-feedback-compressed mean over a shard_map/pmap axis.
+
+    Each replica quantizes its local ``g + resid``; the dequantized values
+    are averaged with ``pmean`` so every replica holds the same approximate
+    mean.  Per-element error of the mean is bounded by the mean of the
+    per-replica quantization errors, i.e. <= max|g| / 254 globally.
+    """
+    out, new_resid = compress_decompress(g, resid)
+    mean = jax.lax.pmean(out, axis_name)
+    return mean, new_resid

@@ -1,0 +1,106 @@
+"""Sharded NFFT fast summation (distributed Algorithm 3.1).
+
+The dense kernel matvec ``y = W̃ x`` factors as
+
+    adjoint NFFT  ->  multiply by kernel coefficients b_hat  ->  forward NFFT
+
+and only the adjoint's accumulation couples nodes across shards.  We shard
+the *node* dimension: each device runs the full adjoint NFFT on its local
+nodes (spread + FFT + deconvolve), a single ``psum`` of the resulting
+``N^d`` spectral coefficients over the mesh axes completes the adjoint
+(the adjoint is linear in the nodes, so summing per-shard coefficient
+grids is exact), and the spectral multiply + forward NFFT back to the
+local nodes are again purely local.  Communication per matvec is therefore
+O(N^d), independent of ``n`` — the O(n/P)-local + O(grid)-allreduce
+pattern the dry-run cells measure at 512 chips.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import nfft as nfft_mod
+from repro.core.nfft import NfftGeometry, NfftPlan
+from repro.dist.compat import shard_map
+
+Array = jax.Array
+
+
+def _spectral_matvec_local(plan: NfftPlan, b_hat: Array,
+                           geometry: NfftGeometry, x: Array,
+                           axes: tuple[str, ...],
+                           tgt_geometry: NfftGeometry | None = None) -> Array:
+    """Per-shard body of the distributed matvec (runs inside shard_map).
+
+    ``geometry``/``x`` hold this shard's slice of the node dimension;
+    ``b_hat`` is replicated.  The one cross-shard collective is the psum of
+    the adjoint's spectral coefficients — the accumulation that crosses
+    shards.  Both transforms reuse the single-device NFFT kernels, so the
+    distributed and local matvecs cannot drift apart.
+    """
+    tgt = geometry if tgt_geometry is None else tgt_geometry
+    x_hat = nfft_mod.nfft_adjoint(plan, geometry, x)
+    if axes:
+        x_hat = jax.lax.psum(x_hat, axes)
+    f_hat = b_hat[..., None] * x_hat if x.ndim == 2 else b_hat * x_hat
+    f = nfft_mod.nfft_forward(plan, tgt, f_hat)
+    return jnp.real(f).astype(x.dtype)
+
+
+def distributed_matvec_fn(op, mesh, axes):
+    """Sharded drop-in for ``op.matvec`` (op: :class:`FastsumOperator`).
+
+    Returns ``mv(x)`` computing ``W x = (W̃ - K(0) I) x`` for ``x`` of shape
+    (n,) or (n, C), with the node dimension sharded over ``axes`` of
+    ``mesh``.  The node count is padded with zero-weight ghost nodes to a
+    multiple of the shard count, so any (n, mesh) combination works.
+    """
+    plan = op.plan
+    axes = tuple(axes)
+    # op.matvec's own contract: the K(0)-diagonal subtraction is only valid
+    # when source and target nodes coincide.  A same-length but distinct
+    # target set (e.g. the KRR prediction operator) must fail loudly here,
+    # not silently evaluate the forward NFFT at the wrong nodes.
+    assert op.tgt_geometry is op.src_geometry, \
+        "distributed matvec requires src == tgt nodes (shared geometry)"
+    n = op.n_source
+    nshard = int(np.prod([mesh.shape[a] for a in axes]))
+    pad = (-n) % nshard
+
+    idx = op.src_geometry.indices
+    w = op.src_geometry.weights
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))  # ghost nodes: weight 0
+
+    spec_geom = P(axes, None)
+
+    @jax.jit
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(), spec_geom, spec_geom, spec_geom),
+                       out_specs=spec_geom, check_rep=False)
+    def _mv(b_hat, idx_, w_, x_):
+        geom = NfftGeometry(indices=idx_, weights=w_)
+        return _spectral_matvec_local(plan, b_hat, geom, x_, axes)
+
+    out_scale = op.output_scale
+    k0 = op.kernel_at_zero
+
+    def matvec(x: Array) -> Array:
+        batched = x.ndim == 2
+        xp = x if batched else x[:, None]
+        if pad:
+            xp = jnp.pad(xp, ((0, pad), (0, 0)))
+        y = _mv(op.b_hat, idx, w, xp)
+        if pad:
+            y = y[:n]
+        if not batched:
+            y = y[..., 0]
+        return y * out_scale - k0 * x
+
+    return matvec

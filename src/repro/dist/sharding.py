@@ -1,0 +1,158 @@
+"""FSDP/TP named-sharding placement rules.
+
+Convention (mirrors ``repro.models.common``): the batch dimension and the
+fully-sharded (ZeRO-3 style) weight dimension live on the ``("pod", "data")``
+axes; tensor parallelism lives on ``"model"``.  All rules are *logical* —
+:func:`named` drops axis names missing from the concrete mesh and axes whose
+size does not divide the array dimension, so the same rules drive the 2-axis
+single-pod mesh, the 3-axis multi-pod mesh, and the 1-device CPU smoke mesh.
+
+Placement is a performance choice, not a correctness one: GSPMD produces
+bit-identical semantics (modulo reduction order) for any valid placement, so
+a dropped axis merely costs replication, never wrong answers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Batch + fully-sharded-parameter axes, widest mesh first.  "pod" crosses the
+# DCN; it only ever carries batch/FSDP sharding, never TP.
+FSDP_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+def _entry_axes(entry) -> tuple:
+    """Spec entry (None | name | tuple of names) -> tuple of axis names."""
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+def _collapse(axes: tuple):
+    """Axis-name tuple -> canonical spec entry (None | name | tuple)."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _fit_entry(dim: int, entry, sizes: dict[str, int]):
+    """Largest usable suffix of ``entry``'s axes for an array dim.
+
+    Filters axis names not present in ``sizes`` (the mesh), then drops
+    leading axes until the combined axis size divides ``dim``.  Returns
+    ``None`` (replicate), a single axis name, or a tuple of names.
+    """
+    axes = tuple(a for a in _entry_axes(entry) if a in sizes)
+    while axes and dim % int(np.prod([sizes[a] for a in axes])) != 0:
+        axes = axes[1:]
+    return _collapse(axes)
+
+
+def named(mesh: Mesh, spec: P, shape: Optional[tuple] = None) -> NamedSharding:
+    """NamedSharding for ``spec`` sanitized against ``mesh`` (and ``shape``).
+
+    Without ``shape``, only filters axis names absent from the mesh.  With
+    ``shape``, also truncates the spec to the array rank and replicates any
+    dimension the named axes cannot evenly divide.
+    """
+    sizes = dict(mesh.shape)
+    entries = tuple(spec)
+    if shape is None:
+        # shape-free path: keep axes present in the mesh, divisibility unknown
+        clean = [_collapse(tuple(a for a in _entry_axes(e) if a in sizes))
+                 for e in entries]
+        return NamedSharding(mesh, P(*clean))
+    entries = entries[: len(shape)]
+    clean = [_fit_entry(int(d), e, sizes)
+             for d, e in zip(shape, entries)]
+    return NamedSharding(mesh, P(*clean))
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:  # pragma: no cover
+            out.append(str(k))
+    return tuple(out)
+
+
+def _rule_for(path, leaf) -> P:
+    """Logical PartitionSpec for one parameter (or optimizer-state) leaf.
+
+    Matrix-shaped leaves get FSDP on the second-to-last dim and TP on the
+    last dim; vectors/scalars (norm gains, biases, factored Adafactor rows)
+    are replicated — they are tiny.  Leaves under the scan-stacked ``stack``
+    subtree carry a leading ``n_periods`` dim which is never sharded.
+    """
+    shape = tuple(leaf.shape)
+    ndim = len(shape)
+    if ndim == 0:
+        return P()
+    names = _path_names(path)
+    lead = 1 if ("stack" in names and ndim >= 2) else 0
+    body = ndim - lead
+    if body < 2:
+        return P()
+    # Tables read by token gathers: any sharding makes the partitioner
+    # rewrite the gather as dynamic-slices, which miscompiles on some jax
+    # versions — replicate (matches the tied-embedding read in lm_logits too).
+    if names and names[-1] == "embed":
+        return P()
+    pad = (None,) * (ndim - 2)
+    return P(*pad, FSDP_AXES, MODEL_AXIS)
+
+
+def _drop_fsdp(spec: P) -> P:
+    """Remove FSDP axes from a spec (serving keeps only TP sharding)."""
+    fsdp = set(FSDP_AXES)
+    return P(*(_collapse(tuple(a for a in _entry_axes(e) if a not in fsdp))
+               for e in tuple(spec)))
+
+
+def param_specs(params: Any, mesh: Mesh, *,
+                serve_replicated: bool = False) -> Any:
+    """Pytree of NamedShardings for a parameter tree.
+
+    ``serve_replicated=True`` drops the FSDP weight sharding (keeping TP) —
+    used by the serving path when bf16 weights fit the per-device HBM
+    budget, avoiding per-step weight all-gathers.
+    """
+    def f(path, leaf):
+        spec = _rule_for(path, leaf)
+        if serve_replicated:
+            spec = _drop_fsdp(spec)
+        return named(mesh, spec, tuple(leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Shard every batch leaf's leading (batch) dim over the FSDP axes."""
+    return jax.tree.map(
+        lambda leaf: named(mesh, P(FSDP_AXES), tuple(leaf.shape)), batch)
+
+
+def cache_specs(caches: Any, mesh: Mesh) -> Any:
+    """KV/SSM cache shardings: batch dim over FSDP axes.
+
+    Scan-stacked caches (under ``stack``) carry a leading ``n_periods`` dim
+    which stays replicated, batch is then dim 1.
+    """
+    def f(path, leaf):
+        shape = tuple(leaf.shape)
+        if "stack" in _path_names(path) and len(shape) >= 2:
+            return named(mesh, P(None, FSDP_AXES), shape)
+        return named(mesh, P(FSDP_AXES), shape)
+
+    return jax.tree_util.tree_map_with_path(f, caches)

@@ -135,8 +135,8 @@ def run_graph_cell(n_nodes: int, d: int, multi_pod: bool, *,
     """Lower the distributed Algorithm 3.1 matvec at cluster scale."""
     from repro.core.fastsum import SETUP_1, SETUP_2, SETUP_3
     from repro.core.nfft import NfftGeometry, NfftPlan
+    from repro.dist.compat import shard_map
     from repro.dist.fastsum_dist import _spectral_matvec_local
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
     import functools
 

@@ -1,0 +1,105 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+Installed by ``conftest.py`` only when the real package is absent (the CI
+image installs the real one via the ``test`` extra in pyproject.toml).
+Covers exactly the subset this suite uses: ``@settings(max_examples=...,
+deadline=...)``, ``@given(*strategies, **kw_strategies)``, and the
+``integers`` / ``floats`` / ``booleans`` / ``sampled_from`` strategies.
+
+Example draws are deterministic (seeded per test name); the first two
+examples pin every strategy to its min/max edge so boundary cases are always
+exercised, the rest are uniform random.  No shrinking — a failing example is
+reported as-is by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw_fn, edges=()):
+        self._draw = draw_fn
+        self.edges = tuple(edges)
+
+    def draw(self, rng, example_idx):
+        if example_idx < len(self.edges):
+            return self.edges[example_idx]
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     edges=(min_value, max_value))
+
+
+def floats(min_value, max_value, **_):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     edges=(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5, edges=(False, True))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: rng.choice(seq), edges=(seq[0], seq[-1]))
+
+
+def settings(max_examples: int = 20, deadline=None, **_):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        # Like real hypothesis, positional strategies bind right-aligned to
+        # the trailing parameters; leading parameters stay pytest fixtures.
+        params = list(inspect.signature(fn).parameters.values())
+        n_pos = len(arg_strats)
+        pos_names = [p.name for p in params[len(params) - n_pos:]]
+        remaining = params[: len(params) - n_pos]
+        remaining = [p for p in remaining if p.name not in kw_strats]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", 20))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                drawn = {name: s.draw(rng, i)
+                         for name, s in zip(pos_names, arg_strats)}
+                drawn.update((k, s.draw(rng, i))
+                             for k, s in kw_strats.items())
+                fn(*args, **kwargs, **drawn)
+
+        # Hide strategy-provided parameters from pytest's fixture resolution.
+        wrapper.__signature__ = inspect.Signature(remaining)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register stub ``hypothesis`` / ``hypothesis.strategies`` modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.floats = floats
+    strategies.booleans = booleans
+    strategies.sampled_from = sampled_from
+    mod.strategies = strategies
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -2,10 +2,26 @@
 
 NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
 benchmarks must see the single real CPU device.  Multi-device sharding tests
-spawn subprocesses with their own XLA_FLAGS (see tests/test_distributed.py).
+spawn subprocesses with their own XLA_FLAGS (see tests/test_distributed.py);
+they carry the ``multidevice`` marker, so a quick local run can skip them
+with ``pytest -m "not multidevice"``.
 """
 
 import jax
 
 # The paper's accuracy claims (1e-14 eigenvalue errors) require float64.
 jax.config.update("jax_enable_x64", True)
+
+try:
+    import hypothesis  # noqa: F401  — real package, if installed
+except ImportError:  # container without the `test` extra: use the stub
+    import _hypothesis_stub
+    _hypothesis_stub.install()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice: spawns subprocesses with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N (slow); "
+        "deselect with -m 'not multidevice' for quick local runs")

@@ -1,0 +1,98 @@
+"""Unit tests for the repro.dist.sharding placement rules.
+
+Runs on the single real CPU device (1x1 mesh) — no subprocess needed; the
+multi-device behavior of the same rules is covered by the ``multidevice``
+tests in test_distributed.py.  Divisibility fallback logic is exercised
+directly through ``_fit_entry`` with synthetic mesh sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (
+    FSDP_AXES, MODEL_AXIS, _fit_entry, _rule_for, batch_specs, cache_specs,
+    named, param_specs)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_fit_entry_drops_non_dividing_axes():
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    # 64 % (2*16) == 0: full tuple kept
+    assert _fit_entry(64, ("pod", "data"), sizes) == ("pod", "data")
+    # 48 % 32 != 0 but 48 % 16 == 0: "pod" dropped
+    assert _fit_entry(48, ("pod", "data"), sizes) == "data"
+    # 7 divides nothing: replicate
+    assert _fit_entry(7, ("pod", "data"), sizes) is None
+    # axis absent from the mesh is filtered before the divisibility check
+    assert _fit_entry(48, ("pod", "data"), {"data": 16}) == "data"
+    assert _fit_entry(100, None, sizes) is None
+
+
+def test_named_filters_and_truncates(mesh):
+    # axes not in the mesh ("pod") are dropped; spec truncates to rank
+    sh = named(mesh, P(FSDP_AXES, MODEL_AXIS), (8, 4))
+    assert sh.spec == P("data", "model")
+    sh1 = named(mesh, P(FSDP_AXES, MODEL_AXIS), (8,))
+    assert sh1.spec == P("data")
+    # shape-free form keeps mesh axes only
+    assert named(mesh, P()).spec == P()
+    assert named(mesh, P(("pod",))).spec == P(None)
+
+
+def test_rule_for_shapes(mesh):
+    w = jnp.zeros((8, 4))
+    vec = jnp.zeros((4,))
+    scalar = jnp.zeros(())
+    path_w = (jax.tree_util.DictKey("mlp"), jax.tree_util.DictKey("w_up"))
+    assert _rule_for(path_w, w) == P(FSDP_AXES, MODEL_AXIS)
+    assert _rule_for(path_w, vec) == P()
+    assert _rule_for(path_w, scalar) == P()
+    # embed tables feed token gathers: replicated
+    path_e = (jax.tree_util.DictKey("embed"),)
+    assert _rule_for(path_e, w) == P()
+    # stacked (scan-over-periods) leaves: leading n_periods dim unsharded
+    path_s = (jax.tree_util.DictKey("stack"), jax.tree_util.SequenceKey(0),
+              jax.tree_util.DictKey("w_up"))
+    stacked = jnp.zeros((3, 8, 4))
+    assert _rule_for(path_s, stacked) == P(None, FSDP_AXES, MODEL_AXIS)
+
+
+def test_param_specs_tree(mesh):
+    params = {
+        "embed": jnp.zeros((16, 8)),
+        "prefix": [{"norm": jnp.zeros((8,)), "w": jnp.zeros((8, 8))}],
+        "stack": [{"w_up": jnp.zeros((2, 8, 8))}],
+    }
+    specs = param_specs(params, mesh)
+    assert specs["embed"].spec == P()
+    assert specs["prefix"][0]["norm"].spec == P()
+    assert specs["prefix"][0]["w"].spec == P("data", "model")
+    assert specs["stack"][0]["w_up"].spec == P(None, "data", "model")
+    # every sharding is usable: device_put round-trips
+    placed = jax.tree.map(jax.device_put, params, specs)
+    assert jax.tree.map(lambda a: a.shape, placed) == \
+        jax.tree.map(lambda a: a.shape, params)
+
+
+def test_param_specs_serve_replicated(mesh):
+    params = {"w": jnp.zeros((8, 8))}
+    specs = param_specs(params, mesh, serve_replicated=True)
+    assert specs["w"].spec == P(None, "model")
+
+
+def test_batch_and_cache_specs(mesh):
+    batch = {"tokens": jnp.zeros((4, 8), jnp.int32),
+             "labels": jnp.zeros((4, 8), jnp.int32)}
+    bs = batch_specs(batch, mesh)
+    assert bs["tokens"].spec == P("data")
+    caches = {"prefix": {0: jnp.zeros((4, 8, 2, 2))},
+              "stack": [jnp.zeros((3, 4, 8, 2, 2))]}
+    cs = cache_specs(caches, mesh)
+    assert cs["prefix"][0].spec == P("data")
+    assert cs["stack"][0].spec == P(None, "data")

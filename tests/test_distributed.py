@@ -13,6 +13,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -120,8 +122,8 @@ def test_sharded_train_step_matches_single_device():
 def test_compress_psum_shard_map():
     run_in_subprocess("""
         import functools, jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
+        from repro.dist.compat import shard_map
         from repro.dist.compression import compress_psum
 
         mesh = jax.make_mesh((8,), ("data",))
