@@ -67,4 +67,11 @@ def timeit(fn: Callable[[], Any], *, warmup: int = 1, repeats: int = 3
 
 
 def quick() -> bool:
+    """Quick mode is the default; REPRO_BENCH_FULL=1 opts into full sweeps.
+
+    ``QUICK=1`` (the CI smoke job's convention) forces quick mode even if
+    REPRO_BENCH_FULL is set.
+    """
+    if os.environ.get("QUICK") == "1":
+        return True
     return os.environ.get("REPRO_BENCH_FULL", "0") != "1"

@@ -1,12 +1,20 @@
 """Matvec scaling — the paper's core O(n) claim (supports Fig. 3d).
 
-Times one W̃x product: NFFT fast summation (setups #1-#3) vs the O(n^2)
-tiled direct matvec vs the Pallas streaming kernel-matvec (interpret mode on
-CPU), over growing n.  Reports seconds and the empirical scaling exponent
-log(t_2n / t_n) / log 2 — the NFFT column should sit near 1, direct near 2.
+Times one W̃x product: the fused real-FFT fastsum engine (setups #1-#3)
+vs the seed two-NFFT path vs the O(n^2) tiled direct matvec, over growing
+n.  Reports seconds, the fused-over-seed speedup, and the empirical scaling
+exponent log(t_2n / t_n) / log 2 — the NFFT columns should sit near 1,
+direct near 2.
+
+Besides the Reporter CSV/JSON, emits ``BENCH_matvec.json`` (path
+overridable via REPRO_BENCH_MATVEC_JSON) with seconds per matvec for every
+(setup, n, path) — the perf baseline future PRs regress against.
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -19,14 +27,24 @@ from repro.core import (
 from repro.data.synthetic import spiral
 
 SIGMA = 3.5
+# the acceptance point every PR regresses against: SETUP_2, n = 50_000
+BENCH_JSON = os.environ.get("REPRO_BENCH_MATVEC_JSON", "BENCH_matvec.json")
+DIRECT_MAX_N = 8000  # O(n^2) baseline cap in quick mode (CI smoke budget)
 
 
 def run(report: Reporter | None = None) -> None:
     rep = report or Reporter("matvec_scaling")
-    sizes = [2000, 8000, 32000] if quick() else [2000, 5000, 10000, 20000,
+    sizes = [2000, 8000, 50000] if quick() else [2000, 5000, 10000, 20000,
                                                  50000, 100000]
     kernel = make_kernel("gaussian", sigma=SIGMA)
     times: dict[str, list] = {}
+    records: list[dict] = []
+
+    def record(name: str, n: int, t: float, **extra) -> None:
+        times.setdefault(name, []).append(t)
+        rep.add(f"{name} n={n}", t, "s", **extra)
+        records.append({"path": name, "n": n, "seconds": t, **extra})
+
     for n in sizes:
         points, _ = spiral(n, seed=2)
         pts = jnp.asarray(points)
@@ -35,21 +53,33 @@ def run(report: Reporter | None = None) -> None:
         for name, setup in (("setup1", SETUP_1), ("setup2", SETUP_2),
                             ("setup3", SETUP_3)):
             op = make_fastsum(kernel, pts, setup)
-            mv = jax.jit(op.matvec)
-            t, _ = timeit(lambda: mv(x))
-            times.setdefault(f"nfft-{name}", []).append(t)
-            rep.add(f"nfft-{name} n={n}", t, "s")
+            # No outer jax.jit: both paths are jitted internally with the
+            # geometry passed as *arguments*.  Closing over the operator
+            # would embed the O(n*taps^d) seed geometry as XLA constants,
+            # which trips a pathological constant-scatter rewrite and times
+            # the compiler, not the matvec.
+            t_fused, _ = timeit(lambda: op.matvec(x))
+            record(f"nfft-fused-{name}", n, t_fused)
+            t_seed, _ = timeit(lambda: op.matvec_reference(x), repeats=1)
+            record(f"nfft-seed-{name}", n, t_seed,
+                   speedup=round(t_seed / t_fused, 2))
 
-        t, _ = timeit(lambda: direct_matvec_tiled(kernel, pts, x, tile=1024),
-                      repeats=1)
-        times.setdefault("direct", []).append(t)
-        rep.add(f"direct n={n}", t, "s")
+        if n <= DIRECT_MAX_N or not quick():
+            t, _ = timeit(lambda: direct_matvec_tiled(kernel, pts, x,
+                                                      tile=1024),
+                          repeats=1)
+            record("direct", n, t)
 
     for name, ts in times.items():
         if len(ts) >= 2:
             expo = float(np.polyfit(np.log(sizes[:len(ts)]), np.log(ts), 1)[0])
             rep.add(f"{name} scaling-exponent", expo, "log-slope")
     rep.save()
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"bench": "matvec_scaling", "unit": "s",
+                   "quick": quick(), "rows": records}, f, indent=1)
+    print(f"wrote {BENCH_JSON} ({len(records)} rows)")
 
 
 if __name__ == "__main__":

@@ -14,10 +14,19 @@ from repro.core.fastsum import (  # noqa: F401
     dense_weight_matrix, dense_normalized_adjacency, direct_matvec_tiled,
 )
 from repro.core.nfft import (  # noqa: F401
-    NfftPlan, NfftGeometry, build_geometry, nfft_forward, nfft_adjoint,
+    NfftPlan, NfftGeometry, WindowGeometry, build_geometry,
+    build_window_geometry, nfft_forward, nfft_adjoint,
+)
+# The fused window kernels stay namespaced (repro.core.fastsum_exec.
+# window_spread/window_gather): re-exporting them here would shadow the
+# same-named, different-signature Pallas kernels in repro.kernels.ops.
+from repro.core.fastsum_exec import (  # noqa: F401
+    fused_matvec_tilde, fused_pipeline, fused_spectral_multiplier,
+    spectral_support,
 )
 from repro.core.lanczos import (  # noqa: F401
-    lanczos, eigsh, eigsh_smallest_laplacian, EigshResult,
+    lanczos, block_lanczos, eigsh, eigsh_smallest_laplacian,
+    BlockLanczosResult, EigshResult,
 )
 from repro.core.solvers import cg, minres, SolveResult  # noqa: F401
 from repro.core.nystrom import (  # noqa: F401

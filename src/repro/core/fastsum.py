@@ -31,9 +31,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import nfft as nfft_mod
+from repro.core import fastsum_exec, nfft as nfft_mod
 from repro.core.kernels import Kernel
-from repro.core.nfft import NfftGeometry, NfftPlan, build_geometry
+from repro.core.nfft import (
+    NfftGeometry, NfftPlan, WindowGeometry, build_geometry,
+    build_window_geometry,
+)
 from repro.core.regularization import kernel_fourier_coefficients
 
 Array = jax.Array
@@ -99,14 +102,20 @@ class FastsumOperator:
 
     plan: NfftPlan  # static
     b_hat: Array
-    src_geometry: NfftGeometry
-    tgt_geometry: NfftGeometry
+    scaled_src: Array  # (n_src, d) nodes in the admissible ball
+    scaled_tgt: Array  # (n_tgt, d), or None when targets == sources
     output_scale: Array  # rho**exponent correction (scalar)
     kernel_at_zero: Array  # K(0) for the *rescaled* kernel, already corrected
+    # Fused-engine state (plan-once): combined spectral multiplier on the
+    # oversampled half-spectrum + separable Morton-sorted window geometry.
+    multiplier_half: Array = None
+    src_window: WindowGeometry = None
+    tgt_window: WindowGeometry = None
 
     def tree_flatten(self):
-        children = (self.b_hat, self.src_geometry, self.tgt_geometry,
-                    self.output_scale, self.kernel_at_zero)
+        children = (self.b_hat, self.scaled_src, self.scaled_tgt,
+                    self.output_scale, self.kernel_at_zero,
+                    self.multiplier_half, self.src_window, self.tgt_window)
         return children, (self.plan,)
 
     @classmethod
@@ -115,14 +124,48 @@ class FastsumOperator:
 
     @property
     def n_source(self) -> int:
-        return self.src_geometry.n_nodes
+        return self.scaled_src.shape[0]
 
     @property
     def n_target(self) -> int:
-        return self.tgt_geometry.n_nodes
+        return self.n_source if self.scaled_tgt is None else self.scaled_tgt.shape[0]
+
+    def _cached_geometry(self, attr: str, nodes: Array) -> NfftGeometry:
+        geom = self.__dict__.get(attr)
+        if geom is None:
+            geom = build_geometry(self.plan, nodes)
+            if not isinstance(geom.indices, jax.core.Tracer):
+                self.__dict__[attr] = geom  # never cache traced values
+        return geom
+
+    @property
+    def src_geometry(self) -> NfftGeometry:
+        """O(n*taps^d) tensor-product geometry, built lazily.
+
+        Only the two-NFFT oracle path reads it; the fused hot path runs on
+        the O(n*d*taps) ``src_window``, so operators that never call the
+        reference matvec never pay the build time or memory.
+        """
+        return self._cached_geometry("_src_geom", self.scaled_src)
+
+    @property
+    def tgt_geometry(self) -> NfftGeometry:
+        if self.scaled_tgt is None:
+            return self.src_geometry
+        return self._cached_geometry("_tgt_geom", self.scaled_tgt)
 
     def matvec_tilde(self, x: Array) -> Array:
-        """y = W̃ x  (diagonal K(0) included)."""
+        """y = W̃ x  (diagonal K(0) included) — fused rfftn pipeline."""
+        if self.multiplier_half is None:  # legacy operators built by hand
+            return self.matvec_tilde_reference(x)
+        f = fastsum_exec.fused_matvec_tilde(
+            self.plan, self.multiplier_half, self.src_window,
+            self.tgt_window, x)
+        return f * self.output_scale
+
+    def matvec_tilde_reference(self, x: Array) -> Array:
+        """Seed two-NFFT path (adjoint -> multiply -> forward); the oracle
+        the fused engine is tested against, and the benchmark baseline."""
         x_hat = nfft_mod.nfft_adjoint(self.plan, self.src_geometry, x)
         f_hat = self.b_hat[..., None] * x_hat if x.ndim == 2 else self.b_hat * x_hat
         f = nfft_mod.nfft_forward(self.plan, self.tgt_geometry, f_hat)
@@ -131,6 +174,10 @@ class FastsumOperator:
     def matvec(self, x: Array) -> Array:
         """y = W x = (W̃ - K(0) I) x.  Only valid when src == tgt nodes."""
         return self.matvec_tilde(x) - self.kernel_at_zero * x
+
+    def matvec_reference(self, x: Array) -> Array:
+        """Two-NFFT W x (oracle/baseline counterpart of :meth:`matvec`)."""
+        return self.matvec_tilde_reference(x) - self.kernel_at_zero * x
 
     def degrees(self) -> Array:
         """d = W 1 (row sums of the zero-diagonal weight matrix)."""
@@ -164,8 +211,9 @@ def make_fastsum(
     plan = params.nfft_plan(d)
     b_hat = kernel_fourier_coefficients(rescaled_kernel, d, params.n_bandwidth,
                                         params.p_eff, eps_b)
-    src_geom = build_geometry(plan, scaled_src)
-    tgt_geom = src_geom if target_points is None else build_geometry(plan, scaled_tgt)
+    src_win = build_window_geometry(plan, scaled_src)
+    tgt_win = src_win if target_points is None else build_window_geometry(plan, scaled_tgt)
+    mult_half = fastsum_exec.fused_spectral_multiplier(plan, b_hat)
 
     exponent = kernel.output_scale_exponent
     out_scale = rho ** exponent if exponent != 0 else jnp.ones((), scaled.dtype)
@@ -176,10 +224,13 @@ def make_fastsum(
     return FastsumOperator(
         plan=plan,
         b_hat=b_hat,
-        src_geometry=src_geom,
-        tgt_geometry=tgt_geom,
+        scaled_src=scaled_src,
+        scaled_tgt=None if target_points is None else scaled_tgt,
         output_scale=jnp.asarray(out_scale, dtype=jnp.real(b_hat).dtype),
         kernel_at_zero=jnp.asarray(k0_corr, dtype=jnp.real(b_hat).dtype),
+        multiplier_half=mult_half,
+        src_window=src_win,
+        tgt_window=tgt_win,
     )
 
 
@@ -253,12 +304,15 @@ def dense_normalized_adjacency(kernel: Kernel, points: Array) -> Array:
     return inv_sqrt[:, None] * w * inv_sqrt[None, :]
 
 
+@functools.partial(jax.jit, static_argnames=("kernel", "tile"))
 def direct_matvec_tiled(kernel: Kernel, points: Array, x: Array,
                         tile: int = 2048) -> Array:
     """O(n^2) FLOPs, O(n*tile) memory direct matvec (the paper's baseline).
 
     Computes rows in tiles without materializing W; used by benchmarks for
-    problem sizes where the dense matrix would not fit.
+    problem sizes where the dense matrix would not fit.  Jitted with the
+    (frozen, hashable) kernel and tile size static, so repeated baseline
+    timings measure compute rather than retracing.
     """
     n = points.shape[0]
     pad = (-n) % tile

@@ -15,7 +15,7 @@ from typing import Callable
 import jax.numpy as jnp
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Kernel:
     """A rotation-invariant kernel ``K(y) = phi(||y||)``.
 
@@ -37,6 +37,37 @@ class Kernel:
     params: dict
     output_scale_exponent: int = 0
     singular_at_origin: bool = False
+
+    # Value-based identity makes Kernel a valid hashable jit static argument:
+    # two make_kernel('gaussian', sigma=s) instances share compiled code.
+    # phi itself cannot be hashed by value, so its defining code location
+    # plus its captured closure values join the key — a hand-built Kernel
+    # with a custom phi (even one built in a loop from the same lambda with
+    # different captured parameters) never aliases another kernel in a jit
+    # cache just because the (name, params) pair matches.
+    def _phi_key(self):
+        phi = self.phi
+        loc = (getattr(phi, "__module__", None),
+               getattr(phi, "__qualname__", repr(phi)),
+               getattr(getattr(phi, "__code__", None), "co_firstlineno", None))
+        cells = getattr(phi, "__closure__", None) or ()
+        try:
+            captured = tuple(c.cell_contents for c in cells)
+            hash(captured)
+        except Exception:  # unhashable capture: fall back to object identity
+            return loc + (id(phi),)
+        return loc + captured
+
+    def _key(self):
+        return (self.name, tuple(sorted(self.params.items())),
+                self.output_scale_exponent, self.singular_at_origin,
+                self._phi_key())
+
+    def __eq__(self, other):
+        return isinstance(other, Kernel) and self._key() == other._key()
+
+    def __hash__(self):
+        return hash(self._key())
 
     def __call__(self, r):
         return self.phi(jnp.asarray(r))

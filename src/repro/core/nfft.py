@@ -118,14 +118,14 @@ class NfftPlan:
             return jnp.exp(-b * (jnp.pi * k / grid) ** 2) / grid
         raise ValueError(self.window)
 
-    def deconvolution_grid(self) -> Array:
-        """prod_t phi_hat(l_t) on the (N,)*d coefficient grid, FFT order."""
-        freqs = jnp.fft.fftfreq(self.n_bandwidth, d=1.0 / self.n_bandwidth)
-        one_d = self.window_fourier_1d(freqs)
-        out = one_d
-        for _ in range(self.d - 1):
-            out = out[..., None] * one_d
-        return out
+    def deconvolution_grid(self) -> np.ndarray:
+        """prod_t phi_hat(l_t) on the (N,)*d coefficient grid, FFT order.
+
+        Cached per plan (the plan is frozen/hashable) as a numpy constant —
+        callers no longer rebuild the grid per transform, and jit traces
+        embed it as a literal instead of re-staging the window evaluation.
+        """
+        return _deconvolution_grid_cached(self)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -135,13 +135,18 @@ class NfftGeometry:
 
     indices: (n, taps^d) int32 — flattened oversampled-grid indices.
     weights: (n, taps^d) float — tensor-product window values.
+    perm: optional (n,) int32 — when present, row ``r`` holds the geometry of
+      node ``perm[r]`` (rows are sorted in Morton/tile order so the window
+      gather/spread kernels get spatial locality).  ``None`` means rows are in
+      node order.
     """
 
     indices: Array
     weights: Array
+    perm: Array | None = None
 
     def tree_flatten(self):
-        return (self.indices, self.weights), None
+        return (self.indices, self.weights, self.perm), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -152,22 +157,74 @@ class NfftGeometry:
         return self.indices.shape[0]
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
-def build_geometry(plan: NfftPlan, nodes: Array) -> NfftGeometry:
-    """Window geometry for nodes (n, d) in [-1/2, 1/2)^d."""
-    n, d = nodes.shape
-    assert d == plan.d, (d, plan.d)
-    grid = plan.grid_size
-    m = plan.m
-    taps = plan.taps
+def morton_codes(cells: Array, grid_size: int, dtype=jnp.int32) -> Array:
+    """Z-order (Morton) codes for integer cell coordinates (n, d).
 
+    Interleaves the bits of the per-dimension cell indices; sorting by the
+    code orders nodes in tiles so neighbouring rows touch neighbouring grid
+    memory.  The caller must pick a ``dtype`` wide enough for
+    ``bits(grid_size) * d`` interleaved bits (int32 covers every paper
+    setup: e.g. grid 128, d=3 -> 21 bits).
+    """
+    n, d = cells.shape
+    bits = max(1, int(grid_size - 1).bit_length())
+    assert bits * d <= jnp.iinfo(dtype).bits - 2, (bits, d, dtype)
+    code = jnp.zeros((n,), dtype=dtype)
+    cells = cells.astype(dtype)
+    for b in range(bits):
+        for t in range(d):
+            code = code | (((cells[:, t] >> b) & 1) << (b * d + t))
+    return code
+
+
+def _morton_perm(cells: Array, grid_size: int) -> Array:
+    """argsort by Morton code, falling back gracefully for huge grids.
+
+    Plans whose interleaved code would overflow int32 use int64 when x64 is
+    enabled; otherwise sorting is skipped (identity order) — ordering is a
+    layout optimization, never a semantic requirement.
+    """
+    n, d = cells.shape
+    bits = max(1, int(grid_size - 1).bit_length())
+    if bits * d <= 30:
+        codes = morton_codes(cells, grid_size)
+    elif jax.config.jax_enable_x64 and bits * d <= 62:
+        codes = morton_codes(cells, grid_size, dtype=jnp.int64)
+    else:
+        return jnp.arange(n, dtype=jnp.int32)
+    return jnp.argsort(codes).astype(jnp.int32)
+
+
+def _window_taps_1d(plan: NfftPlan, nodes: Array):
+    """Per-dim tap indices (unwrapped) and window values for nodes (n, d).
+
+    Returns (base, idx_d, w_d): base (n, d) int32 leftmost tap per dim,
+    idx_d (n, d, taps) unwrapped grid indices, w_d (n, d, taps) weights.
+    """
+    grid, m, taps = plan.grid_size, plan.m, plan.taps
     y = nodes * grid  # grid-scaled positions, per dim
     base = jnp.floor(y).astype(jnp.int32) - m  # (n, d)
     offs = jnp.arange(taps, dtype=jnp.int32)  # (taps,)
-    # per-dim tap indices and window values
     idx_d = base[:, :, None] + offs[None, None, :]  # (n, d, taps)
     dist = nodes[:, :, None] - idx_d.astype(nodes.dtype) / grid
     w_d = plan.window_spatial(dist)  # (n, d, taps)
+    return base, idx_d, w_d
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "sort"))
+def build_geometry(plan: NfftPlan, nodes: Array, *,
+                   sort: bool = True) -> NfftGeometry:
+    """Window geometry for nodes (n, d) in [-1/2, 1/2)^d.
+
+    With ``sort=True`` (default) rows are ordered by the Morton code of the
+    node's base grid cell and the permutation is recorded in ``perm``; the
+    transforms below undo it, so results are independent of ``sort``.
+    """
+    n, d = nodes.shape
+    assert d == plan.d, (d, plan.d)
+    grid = plan.grid_size
+
+    base, idx_d, w_d = _window_taps_1d(plan, nodes)
     idx_mod = jnp.mod(idx_d, grid)  # periodic wrap
 
     # tensor product across dims -> (n, taps^d)
@@ -178,14 +235,109 @@ def build_geometry(plan: NfftPlan, nodes: Array) -> NfftGeometry:
         flat_w = flat_w[:, :, None] * w_d[:, t, None, :]
         flat_idx = flat_idx.reshape(n, -1)
         flat_w = flat_w.reshape(n, -1)
-    return NfftGeometry(indices=flat_idx, weights=flat_w)
+    perm = None
+    if sort:
+        cells = jnp.mod(base + plan.m, grid)  # node cell, in [0, grid)
+        perm = _morton_perm(cells, grid)
+        flat_idx = flat_idx[perm]
+        flat_w = flat_w[perm]
+    return NfftGeometry(indices=flat_idx, weights=flat_w, perm=perm)
 
 
-def _embed_map(plan: NfftPlan) -> Array:
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WindowGeometry:
+    """Separable window geometry for the fused fastsum engine.
+
+    Stores O(n*d*taps) data instead of the O(n*taps^d) tensor-product arrays
+    of :class:`NfftGeometry` — the fused spread/gather recompute the tensor
+    product on the fly and address the padded grid with whole (taps,)^d
+    windows (one `lax.scatter_add`/`lax.gather` window per node).
+
+    base: (n, d) int32 — leftmost tap corner, shifted into [0, grid_size)
+      (the padded-grid coordinate system; see ``pad_width``).
+    weights: (n, d, taps) — per-dimension window values.
+    perm: (n,) int32 — rows are Morton-sorted; row ``r`` is node ``perm[r]``.
+    """
+
+    base: Array
+    weights: Array
+    perm: Array
+
+    def tree_flatten(self):
+        return (self.base, self.weights, self.perm), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.base.shape[0]
+
+
+def window_shift(plan: NfftPlan) -> int:
+    """Offset from unwrapped tap coordinates to padded-grid coordinates."""
+    return plan.grid_size // 2 + plan.m
+
+
+def padded_grid_size(plan: NfftPlan) -> int:
+    """Per-dim size of the wrap-padded grid the fused engine scatters into."""
+    return plan.grid_size + plan.taps - 1
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "sort"))
+def build_window_geometry(plan: NfftPlan, nodes: Array, *,
+                          sort: bool = True) -> WindowGeometry:
+    """Separable (fused-engine) window geometry for nodes in [-1/2, 1/2)^d."""
+    n, d = nodes.shape
+    assert d == plan.d, (d, plan.d)
+    base, _, w_d = _window_taps_1d(plan, nodes)
+    base = base + window_shift(plan)  # into [0, grid_size)
+    if sort:
+        perm = _morton_perm(base, plan.grid_size)
+    else:
+        perm = jnp.arange(n, dtype=jnp.int32)
+    return WindowGeometry(base=base[perm], weights=w_d[perm], perm=perm)
+
+
+def _window_fourier_1d_np(plan: NfftPlan, k: np.ndarray) -> np.ndarray:
+    """Numpy twin of :meth:`NfftPlan.window_fourier_1d`.
+
+    The cached grids below must be plain numpy: a jnp computation would be
+    staged into whichever jit trace first touches the cache, and the cached
+    tracer would leak into every later trace.
+    """
+    import scipy.special
+
+    m, grid = plan.m, plan.grid_size
+    b = plan.window_b()
+    if plan.window == KAISER_BESSEL:
+        arg = b * b - (2.0 * np.pi * k / grid) ** 2
+        s = np.sqrt(np.maximum(arg, 0.0))
+        val = scipy.special.i0e(m * s) * np.exp(m * s - b * m)
+        return np.where(arg >= 0, val, np.exp(-b * m)) / grid
+    if plan.window == GAUSSIAN_WINDOW:
+        return np.exp(-b * (np.pi * k / grid) ** 2) / grid
+    raise ValueError(plan.window)
+
+
+@functools.lru_cache(maxsize=None)
+def _deconvolution_grid_cached(plan: NfftPlan) -> np.ndarray:
+    freqs = np.fft.fftfreq(plan.n_bandwidth, d=1.0 / plan.n_bandwidth)
+    one_d = _window_fourier_1d_np(plan, freqs)
+    out = one_d
+    for _ in range(plan.d - 1):
+        out = out[..., None] * one_d
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _embed_map(plan: NfftPlan) -> np.ndarray:
     """Per-dim index map from FFT-order I_N positions to I_M positions."""
     n, grid = plan.n_bandwidth, plan.grid_size
     k = np.fft.fftfreq(n, d=1.0 / n).astype(np.int32)  # signed freqs
-    return jnp.asarray(np.mod(k, grid))
+    return np.mod(k, grid)
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
@@ -211,6 +363,8 @@ def nfft_forward(plan: NfftPlan, geometry: NfftGeometry, f_hat: Array) -> Array:
 
     vals = g_flat[geometry.indices.reshape(-1)].reshape(*geometry.indices.shape, c)
     out = jnp.sum(vals * geometry.weights[..., None].astype(vals.dtype), axis=1)
+    if geometry.perm is not None:  # rows are Morton-sorted: restore node order
+        out = jnp.zeros_like(out).at[geometry.perm].set(out)
     return out if batched else out[..., 0]
 
 
@@ -223,6 +377,8 @@ def nfft_adjoint(plan: NfftPlan, geometry: NfftGeometry, x: Array) -> Array:
         x = x[..., None]
     c = x.shape[-1]
 
+    if geometry.perm is not None:  # rows are Morton-sorted: align x with rows
+        x = x[geometry.perm]
     vals = geometry.weights[..., None].astype(jnp.result_type(x, geometry.weights)) * x[:, None, :]
     g_flat = jnp.zeros((grid ** d, c), dtype=vals.dtype)
     g_flat = g_flat.at[geometry.indices.reshape(-1)].add(vals.reshape(-1, c))

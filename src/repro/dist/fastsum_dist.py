@@ -2,17 +2,24 @@
 
 The dense kernel matvec ``y = W̃ x`` factors as
 
-    adjoint NFFT  ->  multiply by kernel coefficients b_hat  ->  forward NFFT
+    spread  ->  FFT  ->  spectral multiply  ->  IFFT  ->  gather
 
-and only the adjoint's accumulation couples nodes across shards.  We shard
-the *node* dimension: each device runs the full adjoint NFFT on its local
-nodes (spread + FFT + deconvolve), a single ``psum`` of the resulting
-``N^d`` spectral coefficients over the mesh axes completes the adjoint
-(the adjoint is linear in the nodes, so summing per-shard coefficient
-grids is exact), and the spectral multiply + forward NFFT back to the
-local nodes are again purely local.  Communication per matvec is therefore
-O(N^d), independent of ``n`` — the O(n/P)-local + O(grid)-allreduce
-pattern the dry-run cells measure at 512 chips.
+and only the spectral accumulation couples nodes across shards.  We shard
+the *node* dimension: each device spreads its local nodes onto the
+oversampled grid and runs the real-to-complex FFT locally, a single
+``psum`` over the mesh axes of the *support block* of the multiplied
+half-spectrum completes the reduction (the transform is linear in the
+nodes, so summing per-shard coefficients is exact), and the inverse FFT +
+gather back to the local nodes are again purely local.
+
+The fused engine's combined multiplier is zero outside the embedded
+``I_N^d`` block, and the real half-spectrum halves it again, so the
+all-reduce payload is ~``N^d/2`` complex — half the seed's full ``N^d``
+psum — independent of ``n``: the O(n/P)-local + O(grid)-allreduce pattern
+the dry-run cells measure at 512 chips.
+
+``_spectral_matvec_local`` keeps the seed two-NFFT body (full ``N^d``
+psum); it survives as the oracle and is what the dry-run cells lower.
 """
 
 from __future__ import annotations
@@ -24,8 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import nfft as nfft_mod
-from repro.core.nfft import NfftGeometry, NfftPlan
+from repro.core import fastsum_exec, nfft as nfft_mod
+from repro.core.nfft import NfftGeometry, NfftPlan, WindowGeometry
 from repro.dist.compat import shard_map
 
 Array = jax.Array
@@ -52,6 +59,24 @@ def _spectral_matvec_local(plan: NfftPlan, b_hat: Array,
     return jnp.real(f).astype(x.dtype)
 
 
+def _fused_matvec_local(plan: NfftPlan, mult_half: Array,
+                        geometry: WindowGeometry, x: Array,
+                        axes: tuple[str, ...]) -> Array:
+    """Per-shard body of the fused distributed matvec (inside shard_map).
+
+    ``geometry``/``x`` hold this shard's slice of the (Morton-sorted) node
+    dimension; the multiplier is replicated.  The one cross-shard collective
+    is the psum of the multiplied half-spectrum restricted to the
+    multiplier's support block (~N^d/2 complex: the entire wire payload),
+    injected into the shared single-device pipeline via its
+    ``spectral_reduce`` hook — the distributed and local matvecs literally
+    run the same body and cannot drift apart.
+    """
+    reduce = (lambda block: jax.lax.psum(block, axes)) if axes else None
+    return fastsum_exec.fused_pipeline(plan, mult_half, geometry, geometry,
+                                       x, spectral_reduce=reduce)
+
+
 def distributed_matvec_fn(op, mesh, axes):
     """Sharded drop-in for ``op.matvec`` (op: :class:`FastsumOperator`).
 
@@ -66,27 +91,36 @@ def distributed_matvec_fn(op, mesh, axes):
     # when source and target nodes coincide.  A same-length but distinct
     # target set (e.g. the KRR prediction operator) must fail loudly here,
     # not silently evaluate the forward NFFT at the wrong nodes.
-    assert op.tgt_geometry is op.src_geometry, \
+    assert op.scaled_tgt is None, \
         "distributed matvec requires src == tgt nodes (shared geometry)"
+    assert op.multiplier_half is not None and op.src_window is not None, \
+        "distributed matvec requires a fused operator (build via make_fastsum)"
     n = op.n_source
     nshard = int(np.prod([mesh.shape[a] for a in axes]))
     pad = (-n) % nshard
 
-    idx = op.src_geometry.indices
-    w = op.src_geometry.weights
+    win = op.src_window
+    base, w1d, perm = win.base, win.weights, win.perm
     if pad:
-        idx = jnp.pad(idx, ((0, pad), (0, 0)))
-        w = jnp.pad(w, ((0, pad), (0, 0)))  # ghost nodes: weight 0
+        # ghost nodes: zero window weights (no spread/gather contribution)
+        base = jnp.pad(base, ((0, pad), (0, 0)))
+        w1d = jnp.pad(w1d, ((0, pad), (0, 0), (0, 0)))
+        perm = jnp.concatenate(
+            [perm, jnp.arange(n, n + pad, dtype=perm.dtype)])
 
-    spec_geom = P(axes, None)
+    spec_geom = P(axes, *([None] * (w1d.ndim - 1)))
 
     @jax.jit
     @functools.partial(shard_map, mesh=mesh,
-                       in_specs=(P(), spec_geom, spec_geom, spec_geom),
-                       out_specs=spec_geom, check_rep=False)
-    def _mv(b_hat, idx_, w_, x_):
-        geom = NfftGeometry(indices=idx_, weights=w_)
-        return _spectral_matvec_local(plan, b_hat, geom, x_, axes)
+                       in_specs=(P(), P(axes, None), spec_geom, P(axes, None)),
+                       out_specs=P(axes, None), check_rep=False)
+    def _mv(mult_half, base_, w_, x_):
+        # rows are globally Morton-sorted; the caller pre-permutes x, so the
+        # per-shard geometry uses an identity perm over its local rows.
+        local = WindowGeometry(
+            base=base_, weights=w_,
+            perm=jnp.arange(base_.shape[0], dtype=jnp.int32))
+        return _fused_matvec_local(plan, mult_half, local, x_, axes)
 
     out_scale = op.output_scale
     k0 = op.kernel_at_zero
@@ -96,7 +130,8 @@ def distributed_matvec_fn(op, mesh, axes):
         xp = x if batched else x[:, None]
         if pad:
             xp = jnp.pad(xp, ((0, pad), (0, 0)))
-        y = _mv(op.b_hat, idx, w, xp)
+        y_sorted = _mv(op.multiplier_half, base, w1d, xp[perm])
+        y = jnp.zeros_like(y_sorted).at[perm].set(y_sorted)
         if pad:
             y = y[:n]
         if not batched:

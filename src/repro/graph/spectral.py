@@ -74,16 +74,20 @@ class SpectralResult(NamedTuple):
 
 def spectral_clustering(adjacency: NormalizedAdjacencyOperator, k: int,
                         *, key: Array, num_lanczos_iters: int | None = None,
+                        block_size: int = 1,
                         eigenvectors: Array | None = None,
                         eigenvalues: Array | None = None) -> SpectralResult:
     """NJW spectral clustering with NFFT-accelerated eigenvectors.
 
     Pass precomputed ``eigenvectors`` to reuse (e.g. from Nyström) — then the
-    adjacency operator is only used for its size.
+    adjacency operator is only used for its size.  ``block_size > 1`` uses
+    block Lanczos: the fused fastsum engine applies the operator to whole
+    (n, block) batches, amortizing spread/gather across the block.
     """
     if eigenvectors is None:
         res = eigsh(adjacency.matvec, adjacency.n, k,
                     num_iters=num_lanczos_iters, key=key,
+                    block_size=block_size,
                     dtype=adjacency.inv_sqrt_deg.dtype)
         eigenvectors, eigenvalues = res.eigenvectors, res.eigenvalues
     rows = eigenvectors / jnp.maximum(

@@ -34,19 +34,27 @@ DEFAULT_NODE_TILE = 1024
 
 
 def _gather_kernel(grid_ref, idx_ref, w_ref, o_ref):
-    grid = grid_ref[...]  # (G,) resident
+    grid = grid_ref[...]  # (G, C) resident
     idx = idx_ref[...]  # (TN, taps)
     w = w_ref[...]  # (TN, taps)
-    vals = jnp.take(grid, idx, axis=0)  # (TN, taps)
-    o_ref[...] = jnp.sum(vals * w, axis=1)
+    vals = jnp.take(grid, idx, axis=0)  # (TN, taps, C)
+    o_ref[...] = jnp.sum(vals * w[..., None], axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("node_tile", "interpret"))
 def window_gather(grid: Array, indices: Array, weights: Array, *,
                   node_tile: int = DEFAULT_NODE_TILE,
                   interpret: bool = False) -> Array:
-    """f[j] = sum_t weights[j, t] * grid[indices[j, t]].  grid: (G,) real."""
+    """f[j] = sum_t weights[j, t] * grid[indices[j, t]].
+
+    grid: (G,) or (G, C) real — batched channels share one index/weight
+    stream (the fused engine's multi-RHS layout), so the geometry traffic is
+    amortized over C.  Returns (n,) or (n, C) to match.
+    """
     n, taps = indices.shape
+    batched = grid.ndim == 2
+    g2 = grid if batched else grid[:, None]
+    c = g2.shape[1]
     tn = min(node_tile, max(8, n))
     pad = (-n) % tn
     idx = jnp.pad(indices, ((0, pad), (0, 0)))  # padded rows gather grid[0]*w
@@ -56,15 +64,16 @@ def window_gather(grid: Array, indices: Array, weights: Array, *,
         _gather_kernel,
         grid=(idx.shape[0] // tn,),
         in_specs=[
-            pl.BlockSpec(grid.shape, lambda j: (0,) * grid.ndim),
+            pl.BlockSpec(g2.shape, lambda j: (0, 0)),
             pl.BlockSpec((tn, taps), lambda j: (j, 0)),
             pl.BlockSpec((tn, taps), lambda j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((tn,), lambda j: (j,)),
-        out_shape=jax.ShapeDtypeStruct((idx.shape[0],), grid.dtype),
+        out_specs=pl.BlockSpec((tn, c), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((idx.shape[0], c), g2.dtype),
         interpret=interpret,
-    )(grid, idx, w)
-    return out[:n]
+    )(g2, idx, w)
+    out = out[:n]
+    return out if batched else out[:, 0]
 
 
 def _spread_kernel(x_ref, idx_ref, w_ref, o_ref, *, grid_size: int):
@@ -74,10 +83,11 @@ def _spread_kernel(x_ref, idx_ref, w_ref, o_ref, *, grid_size: int):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[...]  # (TN,)
+    x = x_ref[...]  # (TN, C)
     idx = idx_ref[...]  # (TN, taps)
     w = w_ref[...]  # (TN, taps)
-    vals = (w * x[:, None]).reshape(-1)
+    c = x.shape[-1]
+    vals = (w[..., None] * x[:, None, :]).reshape(-1, c)
     g = o_ref[...]
     o_ref[...] = g.at[idx.reshape(-1)].add(vals)
 
@@ -87,11 +97,17 @@ def _spread_kernel(x_ref, idx_ref, w_ref, o_ref, *, grid_size: int):
 def window_spread(x: Array, indices: Array, weights: Array, *, grid_size: int,
                   node_tile: int = DEFAULT_NODE_TILE,
                   interpret: bool = False) -> Array:
-    """g = scatter-add of weighted node values (transpose of window_gather)."""
+    """g = scatter-add of weighted node values (transpose of window_gather).
+
+    x: (n,) or (n, C); returns (grid_size,) or (grid_size, C).
+    """
     n, taps = indices.shape
+    batched = x.ndim == 2
+    x2 = x if batched else x[:, None]
+    c = x2.shape[1]
     tn = min(node_tile, max(8, n))
     pad = (-n) % tn
-    xp = jnp.pad(x, (0, pad))
+    xp = jnp.pad(x2, ((0, pad), (0, 0)))
     idx = jnp.pad(indices, ((0, pad), (0, 0)))
     w = jnp.pad(weights, ((0, pad), (0, 0)))  # zero weights: no contribution
 
@@ -99,12 +115,12 @@ def window_spread(x: Array, indices: Array, weights: Array, *, grid_size: int,
         functools.partial(_spread_kernel, grid_size=grid_size),
         grid=(idx.shape[0] // tn,),
         in_specs=[
-            pl.BlockSpec((tn,), lambda j: (j,)),
+            pl.BlockSpec((tn, c), lambda j: (j, 0)),
             pl.BlockSpec((tn, taps), lambda j: (j, 0)),
             pl.BlockSpec((tn, taps), lambda j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((grid_size,), lambda j: (0,)),
-        out_shape=jax.ShapeDtypeStruct((grid_size,), x.dtype),
+        out_specs=pl.BlockSpec((grid_size, c), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid_size, c), x2.dtype),
         interpret=interpret,
     )(xp, idx, w)
-    return out
+    return out if batched else out[:, 0]

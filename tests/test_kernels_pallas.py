@@ -81,6 +81,35 @@ def test_window_spread_sweep(n, taps, grid):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("n,taps,grid,c", [(100, 9, 512, 3), (257, 25, 2048, 4)])
+def test_window_gather_batched_channels(n, taps, grid, c):
+    """(G, C) grids share one index/weight stream across channels."""
+    idx = jnp.asarray(RNG.integers(0, grid, (n, taps)), jnp.int32)
+    w = jnp.asarray(RNG.normal(size=(n, taps)), jnp.float64)
+    g = jnp.asarray(RNG.normal(size=(grid, c)), jnp.float64)
+    out = ops.window_gather(g, idx, w, node_tile=128, interpret=True)
+    want = ref.window_gather_ref(g, idx, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-12, atol=1e-12)
+    for i in range(c):
+        single = ops.window_gather(g[:, i], idx, w, node_tile=128,
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(out[:, i]), np.asarray(single),
+                                   rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("n,taps,grid,c", [(100, 9, 512, 3), (200, 25, 1024, 2)])
+def test_window_spread_batched_channels(n, taps, grid, c):
+    idx = jnp.asarray(RNG.integers(0, grid, (n, taps)), jnp.int32)
+    w = jnp.asarray(RNG.normal(size=(n, taps)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(n, c)), jnp.float32)
+    out = ops.window_spread(x, idx, w, grid_size=grid, node_tile=128,
+                            interpret=True)
+    want = ref.window_spread_ref(x, idx, w, grid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_spread_gather_adjoint():
     """<gather(g), x> == <g, spread(x)> — the NFFT adjointness at tile level."""
     n, taps, grid = 256, 27, 1024
