@@ -8,7 +8,11 @@ direct near 2.
 
 Besides the Reporter CSV/JSON, emits ``BENCH_matvec.json`` (path
 overridable via REPRO_BENCH_MATVEC_JSON) with seconds per matvec for every
-(setup, n, path) — the perf baseline future PRs regress against.
+(setup, n, path, backend) — the perf baseline future PRs regress against.
+The fused rows carry a ``backend`` column ("xla"/"pallas", the streaming
+window-step backends of ``repro.core.fastsum_exec``); the pallas backend is
+timed only on a real TPU — interpret-mode timings would measure the
+emulator, not the kernel.
 """
 
 from __future__ import annotations
@@ -41,7 +45,9 @@ def run(report: Reporter | None = None) -> None:
     records: list[dict] = []
 
     def record(name: str, n: int, t: float, **extra) -> None:
-        times.setdefault(name, []).append(t)
+        # scaling fits are per (path, backend) series
+        series = name + (f"-{extra['backend']}" if "backend" in extra else "")
+        times.setdefault(series, []).append(t)
         rep.add(f"{name} n={n}", t, "s", **extra)
         records.append({"path": name, "n": n, "seconds": t, **extra})
 
@@ -50,6 +56,8 @@ def run(report: Reporter | None = None) -> None:
         pts = jnp.asarray(points)
         x = jnp.asarray(np.random.default_rng(0).standard_normal(n))
 
+        backends = ["xla"] + (["pallas"] if jax.default_backend() == "tpu"
+                              else [])
         for name, setup in (("setup1", SETUP_1), ("setup2", SETUP_2),
                             ("setup3", SETUP_3)):
             op = make_fastsum(kernel, pts, setup)
@@ -58,11 +66,15 @@ def run(report: Reporter | None = None) -> None:
             # would embed the O(n*taps^d) seed geometry as XLA constants,
             # which trips a pathological constant-scatter rewrite and times
             # the compiler, not the matvec.
-            t_fused, _ = timeit(lambda: op.matvec(x))
-            record(f"nfft-fused-{name}", n, t_fused)
+            t_fused = {}
+            for be in backends:
+                t_fused[be], _ = timeit(lambda: op.matvec(x, backend=be))
+                record(f"nfft-fused-{name}", n, t_fused[be], backend=be)
+            # seed rows carry no backend column: the two-NFFT path predates
+            # (and bypasses) the streaming window backends
             t_seed, _ = timeit(lambda: op.matvec_reference(x), repeats=1)
             record(f"nfft-seed-{name}", n, t_seed,
-                   speedup=round(t_seed / t_fused, 2))
+                   speedup=round(t_seed / t_fused["xla"], 2))
 
         if n <= DIRECT_MAX_N or not quick():
             t, _ = timeit(lambda: direct_matvec_tiled(kernel, pts, x,

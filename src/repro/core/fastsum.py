@@ -154,13 +154,18 @@ class FastsumOperator:
             return self.src_geometry
         return self._cached_geometry("_tgt_geom", self.scaled_tgt)
 
-    def matvec_tilde(self, x: Array) -> Array:
-        """y = W̃ x  (diagonal K(0) included) — fused rfftn pipeline."""
+    def matvec_tilde(self, x: Array, *, backend: str | None = None) -> Array:
+        """y = W̃ x  (diagonal K(0) included) — fused rfftn pipeline.
+
+        ``backend`` selects the window-step backend ("auto"/"xla"/"pallas",
+        see :func:`repro.core.fastsum_exec.resolve_backend`).
+        """
         if self.multiplier_half is None:  # legacy operators built by hand
+            fastsum_exec.resolve_backend(backend)  # validate even when unused
             return self.matvec_tilde_reference(x)
         f = fastsum_exec.fused_matvec_tilde(
             self.plan, self.multiplier_half, self.src_window,
-            self.tgt_window, x)
+            self.tgt_window, x, backend=backend)
         return f * self.output_scale
 
     def matvec_tilde_reference(self, x: Array) -> Array:
@@ -171,12 +176,22 @@ class FastsumOperator:
         f = nfft_mod.nfft_forward(self.plan, self.tgt_geometry, f_hat)
         return jnp.real(f) * self.output_scale
 
-    def matvec(self, x: Array) -> Array:
-        """y = W x = (W̃ - K(0) I) x.  Only valid when src == tgt nodes."""
-        return self.matvec_tilde(x) - self.kernel_at_zero * x
+    def _require_square(self, name: str) -> None:
+        if self.scaled_tgt is not None:
+            raise ValueError(
+                f"FastsumOperator.{name} subtracts the K(0) diagonal, which "
+                "is only defined when source and target nodes coincide; this "
+                "operator was built with target_points — use matvec_tilde "
+                "for rectangular kernel sums.")
+
+    def matvec(self, x: Array, *, backend: str | None = None) -> Array:
+        """y = W x = (W̃ - K(0) I) x.  Requires src == tgt nodes."""
+        self._require_square("matvec")
+        return self.matvec_tilde(x, backend=backend) - self.kernel_at_zero * x
 
     def matvec_reference(self, x: Array) -> Array:
         """Two-NFFT W x (oracle/baseline counterpart of :meth:`matvec`)."""
+        self._require_square("matvec_reference")
         return self.matvec_tilde_reference(x) - self.kernel_at_zero * x
 
     def degrees(self) -> Array:

@@ -26,14 +26,26 @@ and the two full complex FFTs become one real FFT pair (half the flops and
 spectrum memory).
 
 The window step uses the separable geometry of :class:`~repro.core.nfft.
-WindowGeometry`: one `lax.scatter_add` / `lax.gather` of a whole
-``(taps,)^d`` window per node into a wrap-padded grid, with the tensor
-product of per-dimension weights recomputed on the fly.  That replaces the
-seed's O(n * taps^d) scalar scatter (the dominant cost on CPU — XLA emits a
-serial loop per element) with n windowed vector updates, and shrinks the
-geometry the matvec streams from O(n * taps^d) to O(n * d * taps) values.
-Nodes are Morton-sorted (see ``build_window_geometry``) so consecutive
-windows touch neighbouring grid tiles.
+WindowGeometry` (per-dim patch corner + per-dim weights, O(n * d * taps)
+values; nodes Morton-sorted by ``build_window_geometry`` so consecutive
+windows touch neighbouring grid tiles) and runs on one of two streaming
+backends selected by ``backend="auto"|"xla"|"pallas"``:
+
+* ``"xla"`` (the CPU/portable fallback and the parity oracle): a
+  ``fori_loop`` over Morton-sorted node tiles, each step one
+  `lax.scatter_add` / `lax.gather` of the tile's whole (taps,)^d windows.
+  Peak memory is O(tile * taps^d * C) with the tile sized to a fixed
+  element budget — the (n, taps^d, C) update cube of the PR 2 whole-window
+  path is never materialized.
+
+* ``"pallas"`` (`repro.kernels.nfft_window`): Morton-sorted node tiles
+  stream through VMEM against the resident padded grid; each node
+  scatter-adds into / gathers from only the (taps,)^d patch it touches,
+  with the weight tensor product and batched channels kept in-register.
+
+``backend="auto"`` (the default everywhere) picks pallas on TPU and xla
+elsewhere, so ``FastsumOperator.matvec``, block Lanczos, and the
+distributed matvec pick the fast path up transparently.
 
 Everything is natively multi-RHS: ``x`` of shape (n,) or (n, C) flows
 through with a trailing channel dimension on the grid, so block Lanczos /
@@ -51,8 +63,35 @@ import numpy as np
 from repro.core.nfft import (
     NfftPlan, WindowGeometry, _embed_map, padded_grid_size, window_shift,
 )
+from repro.kernels import nfft_window
 
 Array = jax.Array
+
+BACKENDS = ("auto", "xla", "pallas")
+
+
+def resolve_backend(backend: str | None) -> str:
+    """Resolve the window-step backend: auto -> pallas on TPU, xla elsewhere.
+
+    An *explicit* ``"pallas"`` off-TPU runs the kernels in interpret mode —
+    the per-node streaming loop executed by the Pallas emulator.  That is
+    the parity-testing path (bit-identical semantics to the TPU lowering),
+    not a performance path; benchmarks must not time it.
+
+    Caveat: the TPU Mosaic lowering of these kernels has not yet been
+    exercised on real hardware (ROADMAP follow-up) — on TPU, pass
+    ``backend="xla"`` to opt out of the auto-selected pallas path.
+    """
+    if backend is None or backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("xla", "pallas"):
+        raise ValueError(
+            f"backend must be one of {BACKENDS}, got {backend!r}")
+    return backend
+
+
+def _pallas_interpret() -> bool:
+    return jax.default_backend() != "tpu"
 
 
 def fused_spectral_multiplier(plan: NfftPlan, b_hat: Array) -> Array:
@@ -92,36 +131,113 @@ def spectral_support(plan: NfftPlan) -> tuple:
     return tuple([full] * (plan.d - 1) + [half])
 
 
-def _weight_cube(geometry: WindowGeometry, d: int):
-    """Tensor product of per-dim weights: (n,) + (taps,)*d, built on the fly."""
-    w = geometry.weights  # (n, d, taps)
-    n, _, taps = w.shape
+# Streamed-tile budget for the XLA window step, in weight-cube elements per
+# tile (tile size = _XLA_TILE_ELEMS / taps^d nodes): bounds peak memory at
+# ~1 MiB f64 per channel regardless of n, taps, d.
+_XLA_TILE_ELEMS = 1 << 17
+
+
+def _xla_node_tile(n: int, taps: int, d: int) -> int:
+    return max(64, min(n, _XLA_TILE_ELEMS // taps ** d))
+
+
+def _tile_weight_cube(w: Array, d: int) -> Array:
+    """Tensor product of per-dim weights: (t, d, taps) -> (t,) + (taps,)*d."""
+    t, _, taps = w.shape
     cube = w[:, 0]
-    for t in range(1, d):
-        cube = cube[..., None] * w[:, t].reshape((n,) + (1,) * t + (taps,))
+    for ax in range(1, d):
+        cube = cube[..., None] * w[:, ax].reshape((t,) + (1,) * ax + (taps,))
     return cube
 
 
-def window_spread(plan: NfftPlan, geometry: WindowGeometry, x: Array) -> Array:
-    """Spread node values (n, C) onto the oversampled grid -> (M,)*d + (C,).
+def _xla_spread(plan: NfftPlan, geometry: WindowGeometry, xs: Array) -> Array:
+    """Streaming tiled spread: fori_loop over Morton-sorted node tiles.
 
-    One ``scatter_add`` of a (taps,)^d window per node into a wrap-padded
-    grid, followed by folding the pad back and aligning to FFT order.
+    ``xs`` is already in row (Morton) order.  Each step scatter-adds the
+    whole-(taps,)^d windows of one node tile, so peak memory is
+    O(tile * taps^d * C) (~:data:`_XLA_TILE_ELEMS` elements per channel) —
+    never the full (n, taps^d, C) update cube.
     """
-    d, grid, taps = plan.d, plan.grid_size, plan.taps
+    d, taps = plan.d, plan.taps
     pad_n = padded_grid_size(plan)
-    c = x.shape[-1]
-    cube = _weight_cube(geometry, d)  # (n,) + (taps,)*d
-    updates = cube[..., None] * x[geometry.perm][
-        (slice(None),) + (None,) * d + (slice(None),)]
+    n, c = xs.shape
+    tile = _xla_node_tile(n, taps, d)
+    pad = (-n) % tile
+    # padded rows carry zero weights: their windows add exact zeros at 0
+    base = jnp.pad(geometry.base, ((0, pad), (0, 0)))
+    w = jnp.pad(geometry.weights, ((0, pad), (0, 0), (0, 0)))
+    xp = jnp.pad(xs, ((0, pad), (0, 0)))
     dnums = jax.lax.ScatterDimensionNumbers(
         update_window_dims=tuple(range(1, d + 2)),
         inserted_window_dims=(),
         scatter_dims_to_operand_dims=tuple(range(d)))
-    gpad = jnp.zeros((pad_n,) * d + (c,), dtype=x.dtype)
-    gpad = jax.lax.scatter_add(
-        gpad, geometry.base, updates, dnums,
-        mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS)
+
+    def body(k, g):
+        bt = jax.lax.dynamic_slice_in_dim(base, k * tile, tile, axis=0)
+        wt = jax.lax.dynamic_slice_in_dim(w, k * tile, tile, axis=0)
+        xt = jax.lax.dynamic_slice_in_dim(xp, k * tile, tile, axis=0)
+        cube = _tile_weight_cube(wt, d)  # (tile,) + (taps,)*d
+        updates = cube[..., None] * xt[
+            (slice(None),) + (None,) * d + (slice(None),)]
+        return jax.lax.scatter_add(
+            g, bt, updates, dnums,
+            mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS)
+
+    gpad = jnp.zeros((pad_n,) * d + (c,), dtype=xs.dtype)
+    num_tiles = (n + pad) // tile
+    if num_tiles == 1:
+        return body(0, gpad)
+    return jax.lax.fori_loop(0, num_tiles, body, gpad)
+
+
+def _xla_gather(plan: NfftPlan, geometry: WindowGeometry,
+                gpad: Array) -> Array:
+    """Streaming tiled gather (transpose of :func:`_xla_spread`), row order."""
+    d, taps = plan.d, plan.taps
+    c = gpad.shape[-1]
+    n = geometry.base.shape[0]
+    tile = _xla_node_tile(n, taps, d)
+    pad = (-n) % tile
+    base = jnp.pad(geometry.base, ((0, pad), (0, 0)))
+    w = jnp.pad(geometry.weights, ((0, pad), (0, 0), (0, 0)))
+    dnums = jax.lax.GatherDimensionNumbers(
+        offset_dims=tuple(range(1, d + 2)),
+        collapsed_slice_dims=(),
+        start_index_map=tuple(range(d)))
+
+    def body(k, acc):
+        bt = jax.lax.dynamic_slice_in_dim(base, k * tile, tile, axis=0)
+        wt = jax.lax.dynamic_slice_in_dim(w, k * tile, tile, axis=0)
+        vals = jax.lax.gather(
+            gpad, bt, dnums, slice_sizes=(taps,) * d + (c,),
+            mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS)
+        out = jnp.sum(vals * _tile_weight_cube(wt, d)[..., None],
+                      axis=tuple(range(1, d + 1)))  # (tile, C)
+        return jax.lax.dynamic_update_slice_in_dim(acc, out, k * tile, axis=0)
+
+    acc = jnp.zeros((n + pad, c), dtype=gpad.dtype)
+    num_tiles = (n + pad) // tile
+    if num_tiles == 1:
+        return body(0, acc)[:n]
+    return jax.lax.fori_loop(0, num_tiles, body, acc)[:n]
+
+
+def window_spread(plan: NfftPlan, geometry: WindowGeometry, x: Array, *,
+                  backend: str | None = None) -> Array:
+    """Spread node values (n, C) onto the oversampled grid -> (M,)*d + (C,).
+
+    Streams separable (taps,)^d windows into a wrap-padded grid on the
+    selected backend, then folds the pad back and aligns to FFT order.
+    """
+    d, grid, taps = plan.d, plan.grid_size, plan.taps
+    pad_n = padded_grid_size(plan)
+    xs = x[geometry.perm]  # align node values with the Morton-sorted rows
+    if resolve_backend(backend) == "pallas":
+        gpad = nfft_window.window_spread(
+            xs, geometry.base, geometry.weights, padded_size=pad_n,
+            interpret=_pallas_interpret())
+    else:
+        gpad = _xla_spread(plan, geometry, xs)
     # fold the periodic pad back: unwrapped u and u - M are the same cell
     ext = taps - 1
     for ax in range(d):
@@ -133,43 +249,41 @@ def window_spread(plan: NfftPlan, geometry: WindowGeometry, x: Array) -> Array:
     return jnp.roll(gpad, (-window_shift(plan),) * d, axis=tuple(range(d)))
 
 
-def window_gather(plan: NfftPlan, geometry: WindowGeometry, g: Array) -> Array:
+def window_gather(plan: NfftPlan, geometry: WindowGeometry, g: Array, *,
+                  backend: str | None = None) -> Array:
     """Gather node values from the grid (M,)*d + (C,) -> (n, C).
 
     Exact transpose of :func:`window_spread` (same geometry, same weights):
-    wrap-pad the grid, one (taps,)^d window gather per node, contract with
-    the on-the-fly weight cube, then restore node order.
+    wrap-pad the grid, stream one (taps,)^d window gather per node on the
+    selected backend, then restore node order.
     """
-    d, grid, taps = plan.d, plan.grid_size, plan.taps
-    c = g.shape[-1]
+    d, taps = plan.d, plan.taps
     rolled = jnp.roll(g, (window_shift(plan),) * d, axis=tuple(range(d)))
     gpad = jnp.pad(rolled, [(0, taps - 1)] * d + [(0, 0)], mode="wrap")
-    dnums = jax.lax.GatherDimensionNumbers(
-        offset_dims=tuple(range(1, d + 2)),
-        collapsed_slice_dims=(),
-        start_index_map=tuple(range(d)))
-    vals = jax.lax.gather(
-        gpad, geometry.base, dnums, slice_sizes=(taps,) * d + (c,),
-        mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS)
-    cube = _weight_cube(geometry, d)
-    out = jnp.sum(vals * cube[..., None], axis=tuple(range(1, d + 1)))
+    if resolve_backend(backend) == "pallas":
+        out = nfft_window.window_gather(
+            gpad, geometry.base, geometry.weights,
+            interpret=_pallas_interpret())
+    else:
+        out = _xla_gather(plan, geometry, gpad)
     return jnp.zeros_like(out).at[geometry.perm].set(out)
 
 
 def fused_pipeline(plan: NfftPlan, multiplier_half: Array,
                    src: WindowGeometry, tgt: WindowGeometry, x: Array,
-                   spectral_reduce=None) -> Array:
+                   spectral_reduce=None, backend: str | None = None) -> Array:
     """spread -> rfftn -> multiply -> irfftn -> gather, one traceable body.
 
     ``spectral_reduce``, when given, is applied to the support block of the
     multiplied half-spectrum (see :func:`spectral_support`) — the hook the
     distributed matvec uses to psum the one cross-shard accumulation, so the
     local and distributed pipelines share this single implementation.
+    ``backend`` selects the window-step backend (see :func:`resolve_backend`).
     """
     d = plan.d
     batched = x.ndim == 2
     xb = x if batched else x[:, None]
-    g = window_spread(plan, src, xb)
+    g = window_spread(plan, src, xb, backend=backend)
     g_hat = jnp.fft.rfftn(g, axes=tuple(range(d)))
     g_hat = g_hat * multiplier_half.astype(g_hat.dtype)[..., None]
     if spectral_reduce is not None:
@@ -177,13 +291,13 @@ def fused_pipeline(plan: NfftPlan, multiplier_half: Array,
         block = spectral_reduce(g_hat[tuple(sup)])
         g_hat = jnp.zeros_like(g_hat).at[tuple(sup)].set(block)
     y = jnp.fft.irfftn(g_hat, s=(plan.grid_size,) * d, axes=tuple(range(d)))
-    out = window_gather(plan, tgt, y.astype(xb.dtype))
+    out = window_gather(plan, tgt, y.astype(xb.dtype), backend=backend)
     return out if batched else out[..., 0]
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
+@functools.partial(jax.jit, static_argnames=("plan", "backend"))
 def fused_matvec_tilde(plan: NfftPlan, multiplier_half: Array,
                        src: WindowGeometry, tgt: WindowGeometry,
-                       x: Array) -> Array:
+                       x: Array, backend: str | None = None) -> Array:
     """y = W̃ x via the fused pipeline; x: (n,) or (n, C) real."""
-    return fused_pipeline(plan, multiplier_half, src, tgt, x)
+    return fused_pipeline(plan, multiplier_half, src, tgt, x, backend=backend)

@@ -31,7 +31,9 @@ Matvec = Callable[[Array], Array]
 
 class LanczosResult(NamedTuple):
     alphas: Array  # (k,) diagonal of T
-    betas: Array  # (k,) sub-diagonal; betas[0] = ||r0||, betas[i>0] live
+    betas: Array  # (k,) sub-diagonal; betas[i>=1] couples q_i to q_{i+1},
+    #   betas[0] is never written and stays 0 (v0 is normalized before the
+    #   iteration, so no ||r0|| is recorded anywhere)
     basis: Array  # (k, n) rows are the Lanczos vectors q_1..q_k
     residual_beta: Array  # beta_{k+1}
 
@@ -192,8 +194,10 @@ def eigsh(matvec: Matvec, n: int, k: int, *, num_iters: int | None = None,
         need = min(k, n)
         while block_size > 1 and (n // block_size) * block_size < need:
             block_size -= 1
-        assert v0 is None or v0.shape[1] == block_size, \
-            f"v0 block width {v0.shape[1]} too large for n={n}, k={k}"
+        if v0 is not None and v0.shape[1] > block_size:
+            # the shrinking above reduced the block below the caller's v0
+            # width (small n, non-dividing block): keep the leading columns
+            v0 = v0[:, :block_size]
         num_blocks = max(min(-(-num_iters // block_size), n // block_size),
                          -(-need // block_size))
         if v0 is None:

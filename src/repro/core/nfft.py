@@ -24,11 +24,12 @@ fast-summation operator  F . diag(b_hat) . F^H  is exactly Hermitian for real
 operator, not an approximately-symmetric one.
 
 TPU adaptation (DESIGN.md §3): node sets are static across Krylov iterations,
-so the window geometry — flattened grid indices and tensor-product weights,
-``(2m+1)^d`` taps per node — is precomputed once (:class:`NfftGeometry`) and
-reused by every matvec.  The gather path has a Pallas kernel
-(`repro.kernels.nfft_window`); the scatter path uses XLA ``.at[].add`` which
-lowers to an efficient sorted segment-sum on TPU.
+so window geometry is precomputed once and reused by every matvec.  The hot
+path uses the *separable* :class:`WindowGeometry` (O(n*d*taps) values)
+consumed by the streaming window backends in ``repro.core.fastsum_exec`` /
+``repro.kernels.nfft_window``; the flattened tensor-product
+:class:`NfftGeometry` (O(n*taps^d) values) survives only for the two-NFFT
+oracle transforms below.
 """
 
 from __future__ import annotations
@@ -131,7 +132,12 @@ class NfftPlan:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class NfftGeometry:
-    """Precomputed window geometry for a fixed node set.
+    """Flattened tensor-product window geometry (oracle transforms only).
+
+    The fused engine and both streaming window backends run on the separable
+    :class:`WindowGeometry`; this O(n*taps^d) layout is kept for the
+    two-NFFT reference path (`nfft_forward`/`nfft_adjoint`) and the dry-run
+    cells.
 
     indices: (n, taps^d) int32 — flattened oversampled-grid indices.
     weights: (n, taps^d) float — tensor-product window values.

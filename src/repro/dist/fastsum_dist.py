@@ -61,7 +61,8 @@ def _spectral_matvec_local(plan: NfftPlan, b_hat: Array,
 
 def _fused_matvec_local(plan: NfftPlan, mult_half: Array,
                         geometry: WindowGeometry, x: Array,
-                        axes: tuple[str, ...]) -> Array:
+                        axes: tuple[str, ...],
+                        backend: str | None = None) -> Array:
     """Per-shard body of the fused distributed matvec (inside shard_map).
 
     ``geometry``/``x`` hold this shard's slice of the (Morton-sorted) node
@@ -74,16 +75,19 @@ def _fused_matvec_local(plan: NfftPlan, mult_half: Array,
     """
     reduce = (lambda block: jax.lax.psum(block, axes)) if axes else None
     return fastsum_exec.fused_pipeline(plan, mult_half, geometry, geometry,
-                                       x, spectral_reduce=reduce)
+                                       x, spectral_reduce=reduce,
+                                       backend=backend)
 
 
-def distributed_matvec_fn(op, mesh, axes):
+def distributed_matvec_fn(op, mesh, axes, *, backend: str | None = None):
     """Sharded drop-in for ``op.matvec`` (op: :class:`FastsumOperator`).
 
     Returns ``mv(x)`` computing ``W x = (W̃ - K(0) I) x`` for ``x`` of shape
     (n,) or (n, C), with the node dimension sharded over ``axes`` of
     ``mesh``.  The node count is padded with zero-weight ghost nodes to a
     multiple of the shard count, so any (n, mesh) combination works.
+    ``backend`` selects the per-shard window-step backend (default "auto":
+    pallas on TPU, xla elsewhere).
     """
     plan = op.plan
     axes = tuple(axes)
@@ -120,7 +124,8 @@ def distributed_matvec_fn(op, mesh, axes):
         local = WindowGeometry(
             base=base_, weights=w_,
             perm=jnp.arange(base_.shape[0], dtype=jnp.int32))
-        return _fused_matvec_local(plan, mult_half, local, x_, axes)
+        return _fused_matvec_local(plan, mult_half, local, x_, axes,
+                                   backend=backend)
 
     out_scale = op.output_scale
     k0 = op.kernel_at_zero

@@ -84,15 +84,18 @@ def spectral_clustering(adjacency: NormalizedAdjacencyOperator, k: int,
     block Lanczos: the fused fastsum engine applies the operator to whole
     (n, block) batches, amortizing spread/gather across the block.
     """
+    # independent streams for the Lanczos start vector and the k-means++
+    # init — reusing one key would correlate the two randomizations
+    key_eigs, key_kmeans = jax.random.split(key)
     if eigenvectors is None:
         res = eigsh(adjacency.matvec, adjacency.n, k,
-                    num_iters=num_lanczos_iters, key=key,
+                    num_iters=num_lanczos_iters, key=key_eigs,
                     block_size=block_size,
                     dtype=adjacency.inv_sqrt_deg.dtype)
         eigenvectors, eigenvalues = res.eigenvectors, res.eigenvalues
     rows = eigenvectors / jnp.maximum(
         jnp.linalg.norm(eigenvectors, axis=1, keepdims=True), 1e-30)
-    km = kmeans(key, rows, k)
+    km = kmeans(key_kmeans, rows, k)
     return SpectralResult(assignments=km.assignments,
                           eigenvalues=eigenvalues, eigenvectors=eigenvectors)
 

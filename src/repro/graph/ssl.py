@@ -31,14 +31,25 @@ Array = jax.Array
 def make_training_vector(labels: Array, n_samples_per_class: int, n_classes: int,
                          *, key: Array, positive_class: int) -> tuple[Array, Array]:
     """Binary training vector f (+1 for positive class samples, -1 for other
-    class samples, 0 elsewhere) and the sample mask (paper Section 6.2.2)."""
+    class samples, 0 elsewhere) and the sample mask (paper Section 6.2.2).
+
+    Per-class sample counts are clamped to the class size, so classes with
+    fewer than ``n_samples_per_class`` members contribute all their members
+    and nothing else (the selection must never spill past the class into the
+    sentinel rows and label wrong-class nodes).  Eager-only: the clamp reads
+    concrete class sizes from ``labels``.
+    """
     n = labels.shape[0]
     f = jnp.zeros((n,))
     mask = jnp.zeros((n,), bool)
     keys = jax.random.split(key, n_classes)
     for c in range(n_classes):
-        idx = jnp.where(labels == c, jax.random.uniform(keys[c], (n,)), 2.0)
-        chosen = jnp.argsort(idx)[:n_samples_per_class]
+        members = labels == c
+        take = min(n_samples_per_class, int(jnp.sum(members)))
+        if take == 0:
+            continue
+        idx = jnp.where(members, jax.random.uniform(keys[c], (n,)), 2.0)
+        chosen = jnp.argsort(idx)[:take]
         sign = jnp.where(c == positive_class, 1.0, -1.0)
         f = f.at[chosen].set(sign)
         mask = mask.at[chosen].set(True)

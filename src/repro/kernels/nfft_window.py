@@ -1,23 +1,30 @@
-"""NFFT window gathering/spreading — Pallas TPU kernels.
+"""NFFT window spreading/gathering — streaming tiled Pallas backend.
 
-The O(m^d n) window step of the NFFT (DESIGN.md §3).  Node geometry (grid
-indices + tensor-product weights) is precomputed once per node set, so both
-kernels operate on a *static* sparsity pattern:
+The O(taps^d n) window step of the NFFT, operating directly on the fused
+engine's *separable* window geometry (:class:`repro.core.nfft.
+WindowGeometry`): per-node patch corner ``base`` (n, d) in padded-grid
+coordinates and per-dimension weights (n, d, taps).  The tensor product
+across dimensions is computed in registers inside the kernel — the
+``(n, taps^d, C)`` update cube of the whole-window XLA path is never
+materialized.
 
-* gather:  f[j] = sum_t w[j,t] * grid[idx[j,t]]  — node tiles stream through
-  VMEM while the oversampled grid stays resident (valid for d <= 2 at the
-  paper's bandwidths: M^d complex <= ~4 MiB).  The inner gather uses vector
-  ``jnp.take``; on TPU this lowers to Mosaic's dynamic-gather.
+* spread:  Morton-sorted node tiles stream through VMEM while the
+  wrap-padded oversampled grid stays resident as the kernel's revisited
+  output block.  Each node scatter-adds its ``(taps,)^d`` window into only
+  the grid patch it touches, via dynamic-slice read-modify-write; Morton
+  order makes consecutive patches overlap, so the RMW traffic stays in
+  cache/VMEM-local lines.
 
-* spread:  the transpose — scatter-add of weighted node values into the
-  grid.  Implemented as read-modify-write accumulation over sequential node
-  tiles (the output block index map is constant, so the grid tile is
-  revisited).  On TPU, unsorted scatter vectorizes poorly; the production
-  path for d = 3 is the XLA sorted segment-sum in repro.core.nfft — this
-  kernel is the VMEM-resident alternative for d <= 2.
+* gather:  the exact transpose — each node dynamic-slices its ``(taps,)^d``
+  patch out of the resident grid and contracts it with the in-register
+  weight cube.
 
-Complex values are carried as separate real/imag float arrays (Mosaic has no
-complex dtype).
+Batched channels (the fused engine's multi-RHS layout) ride on the
+innermost dimension of both the grid and the node values, so one geometry
+stream is amortized over C right-hand sides.  ``d`` is 1..3 (the paper's
+range); the grid is the *padded* grid (``repro.core.nfft.padded_grid_size``)
+so no wrapping logic lives in the kernel — the fold-back of the periodic pad
+is the caller's (cheap, backend-independent) job.
 """
 
 from __future__ import annotations
@@ -33,94 +40,115 @@ Array = jax.Array
 DEFAULT_NODE_TILE = 1024
 
 
-def _gather_kernel(grid_ref, idx_ref, w_ref, o_ref):
-    grid = grid_ref[...]  # (G, C) resident
-    idx = idx_ref[...]  # (TN, taps)
-    w = w_ref[...]  # (TN, taps)
-    vals = jnp.take(grid, idx, axis=0)  # (TN, taps, C)
-    o_ref[...] = jnp.sum(vals * w[..., None], axis=1)
+def _weight_cube(w: Array, d: int) -> Array:
+    """Tensor product of one node's per-dim weights: (d, taps) -> (taps,)*d."""
+    cube = w[0]
+    for t in range(1, d):
+        cube = cube[..., None] * w[t]
+    return cube
 
 
-@functools.partial(jax.jit, static_argnames=("node_tile", "interpret"))
-def window_gather(grid: Array, indices: Array, weights: Array, *,
-                  node_tile: int = DEFAULT_NODE_TILE,
-                  interpret: bool = False) -> Array:
-    """f[j] = sum_t weights[j, t] * grid[indices[j, t]].
-
-    grid: (G,) or (G, C) real — batched channels share one index/weight
-    stream (the fused engine's multi-RHS layout), so the geometry traffic is
-    amortized over C.  Returns (n,) or (n, C) to match.
-    """
-    n, taps = indices.shape
-    batched = grid.ndim == 2
-    g2 = grid if batched else grid[:, None]
-    c = g2.shape[1]
-    tn = min(node_tile, max(8, n))
-    pad = (-n) % tn
-    idx = jnp.pad(indices, ((0, pad), (0, 0)))  # padded rows gather grid[0]*w
-    w = jnp.pad(weights, ((0, pad), (0, 0)))  # w=0 -> contribution 0
-
-    out = pl.pallas_call(
-        _gather_kernel,
-        grid=(idx.shape[0] // tn,),
-        in_specs=[
-            pl.BlockSpec(g2.shape, lambda j: (0, 0)),
-            pl.BlockSpec((tn, taps), lambda j: (j, 0)),
-            pl.BlockSpec((tn, taps), lambda j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((tn, c), lambda j: (j, 0)),
-        out_shape=jax.ShapeDtypeStruct((idx.shape[0], c), g2.dtype),
-        interpret=interpret,
-    )(g2, idx, w)
-    out = out[:n]
-    return out if batched else out[:, 0]
-
-
-def _spread_kernel(x_ref, idx_ref, w_ref, o_ref, *, grid_size: int):
+def _spread_kernel(base_ref, w_ref, x_ref, o_ref, *, d: int, taps: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[...]  # (TN, C)
-    idx = idx_ref[...]  # (TN, taps)
-    w = w_ref[...]  # (TN, taps)
-    c = x.shape[-1]
-    vals = (w[..., None] * x[:, None, :]).reshape(-1, c)
-    g = o_ref[...]
-    o_ref[...] = g.at[idx.reshape(-1)].add(vals)
+    def body(r, carry):
+        b = base_ref[pl.ds(r, 1), :][0]  # (d,) patch corner
+        w = w_ref[pl.ds(r, 1)][0]  # (d, taps)
+        xr = x_ref[pl.ds(r, 1), :][0]  # (C,) channels in-register
+        cube = _weight_cube(w, d)  # (taps,)*d
+        patch = tuple(pl.ds(b[t], taps) for t in range(d)) + (slice(None),)
+        o_ref[patch] = o_ref[patch] + cube[..., None] * xr
+        return carry
+
+    jax.lax.fori_loop(0, x_ref.shape[0], body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("grid_size", "node_tile",
+@functools.partial(jax.jit, static_argnames=("padded_size", "node_tile",
                                              "interpret"))
-def window_spread(x: Array, indices: Array, weights: Array, *, grid_size: int,
+def window_spread(x: Array, base: Array, weights: Array, *, padded_size: int,
                   node_tile: int = DEFAULT_NODE_TILE,
                   interpret: bool = False) -> Array:
-    """g = scatter-add of weighted node values (transpose of window_gather).
+    """Scatter-add separable node windows onto the padded grid.
 
-    x: (n,) or (n, C); returns (grid_size,) or (grid_size, C).
+    x: (n,) or (n, C); base: (n, d) int32 patch corners with
+    ``0 <= base`` and ``base + taps <= padded_size``; weights: (n, d, taps).
+    Returns the padded grid, shape ``(padded_size,)*d`` [+ ``(C,)``].
     """
-    n, taps = indices.shape
+    n, d, taps = weights.shape
     batched = x.ndim == 2
     x2 = x if batched else x[:, None]
     c = x2.shape[1]
     tn = min(node_tile, max(8, n))
     pad = (-n) % tn
+    # padded rows carry zero weights: their windows add exact zeros
     xp = jnp.pad(x2, ((0, pad), (0, 0)))
-    idx = jnp.pad(indices, ((0, pad), (0, 0)))
-    w = jnp.pad(weights, ((0, pad), (0, 0)))  # zero weights: no contribution
+    bp = jnp.pad(base, ((0, pad), (0, 0)))
+    wp = jnp.pad(weights, ((0, pad), (0, 0), (0, 0)))
 
     out = pl.pallas_call(
-        functools.partial(_spread_kernel, grid_size=grid_size),
-        grid=(idx.shape[0] // tn,),
+        functools.partial(_spread_kernel, d=d, taps=taps),
+        grid=(xp.shape[0] // tn,),
         in_specs=[
+            pl.BlockSpec((tn, d), lambda j: (j, 0)),
+            pl.BlockSpec((tn, d, taps), lambda j: (j, 0, 0)),
             pl.BlockSpec((tn, c), lambda j: (j, 0)),
-            pl.BlockSpec((tn, taps), lambda j: (j, 0)),
-            pl.BlockSpec((tn, taps), lambda j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((grid_size, c), lambda j: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((grid_size, c), x2.dtype),
+        out_specs=pl.BlockSpec((padded_size,) * d + (c,),
+                               lambda j: (0,) * (d + 1)),
+        out_shape=jax.ShapeDtypeStruct((padded_size,) * d + (c,), x2.dtype),
         interpret=interpret,
-    )(xp, idx, w)
+    )(bp, wp, xp)
+    return out if batched else out[..., 0]
+
+
+def _gather_kernel(g_ref, base_ref, w_ref, o_ref, *, d: int, taps: int):
+    def body(r, carry):
+        b = base_ref[pl.ds(r, 1), :][0]
+        w = w_ref[pl.ds(r, 1)][0]
+        cube = _weight_cube(w, d)
+        patch = tuple(pl.ds(b[t], taps) for t in range(d)) + (slice(None),)
+        vals = g_ref[patch]  # (taps,)*d + (C,)
+        o_ref[pl.ds(r, 1), :] = jnp.sum(
+            vals * cube[..., None], axis=tuple(range(d)))[None]
+        return carry
+
+    jax.lax.fori_loop(0, o_ref.shape[0], body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("node_tile", "interpret"))
+def window_gather(grid: Array, base: Array, weights: Array, *,
+                  node_tile: int = DEFAULT_NODE_TILE,
+                  interpret: bool = False) -> Array:
+    """Gather separable node windows from the padded grid (spread transpose).
+
+    grid: (padded_size,)*d [+ (C,)]; base/weights as in
+    :func:`window_spread`.  Returns (n,) or (n, C) to match ``grid``.
+    """
+    n, d, taps = weights.shape
+    batched = grid.ndim == d + 1
+    g2 = grid if batched else grid[..., None]
+    c = g2.shape[-1]
+    padded_size = g2.shape[0]
+    tn = min(node_tile, max(8, n))
+    pad = (-n) % tn
+    bp = jnp.pad(base, ((0, pad), (0, 0)))  # padded rows read patch 0 * w=0
+    wp = jnp.pad(weights, ((0, pad), (0, 0), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_gather_kernel, d=d, taps=taps),
+        grid=(bp.shape[0] // tn,),
+        in_specs=[
+            pl.BlockSpec((padded_size,) * d + (c,), lambda j: (0,) * (d + 1)),
+            pl.BlockSpec((tn, d), lambda j: (j, 0)),
+            pl.BlockSpec((tn, d, taps), lambda j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, c), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp.shape[0], c), g2.dtype),
+        interpret=interpret,
+    )(g2, bp, wp)
+    out = out[:n]
     return out if batched else out[:, 0]

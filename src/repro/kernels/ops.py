@@ -37,18 +37,20 @@ def kernel_matvec(points_out: Array, points_in: Array, x: Array, *,
         **kw)
 
 
-def window_gather(grid: Array, indices: Array, weights: Array, *,
+def window_gather(grid: Array, base: Array, weights: Array, *,
                   interpret: bool | None = None, **kw) -> Array:
+    """Separable-geometry window gather; see repro.kernels.nfft_window."""
     return _nw.window_gather(
-        grid, indices, weights,
+        grid, base, weights,
         interpret=_default_interpret() if interpret is None else interpret,
         **kw)
 
 
-def window_spread(x: Array, indices: Array, weights: Array, *, grid_size: int,
+def window_spread(x: Array, base: Array, weights: Array, *, padded_size: int,
                   interpret: bool | None = None, **kw) -> Array:
+    """Separable-geometry window spread; see repro.kernels.nfft_window."""
     return _nw.window_spread(
-        x, indices, weights, grid_size=grid_size,
+        x, base, weights, padded_size=padded_size,
         interpret=_default_interpret() if interpret is None else interpret,
         **kw)
 

@@ -43,30 +43,58 @@ def kernel_profile_r2(r2: Array, kernel_name: str, param: float) -> Array:
     raise ValueError(kernel_name)
 
 
-def window_gather_ref(grid: Array, indices: Array, weights: Array) -> Array:
-    """f_j = sum_t weights[j,t] * grid[indices[j,t]]  (NFFT gathering).
+def _weight_cubes(weights: Array) -> Array:
+    """Tensor product of per-dim weights: (n, d, taps) -> (n,) + (taps,)*d.
 
-    grid: (G,) or (G, c); indices/weights: (n, taps).
+    Deliberately materializes the full cube — these are the oracles the
+    streaming kernels (which never build it) are checked against.
     """
-    vals = grid[indices]  # (n, taps) or (n, taps, c)
-    if grid.ndim == 2:
-        return jnp.sum(vals * weights[..., None], axis=1)
-    return jnp.sum(vals * weights, axis=1)
+    n, d, taps = weights.shape
+    cube = weights[:, 0]
+    for t in range(1, d):
+        cube = cube[..., None] * weights[:, t].reshape(
+            (n,) + (1,) * t + (taps,))
+    return cube
 
 
-def window_spread_ref(x: Array, indices: Array, weights: Array,
-                      grid_size: int) -> Array:
-    """g = sum_j x_j * weights[j, :] scattered at indices[j, :]  (spreading).
+def window_gather_ref(grid: Array, base: Array, weights: Array) -> Array:
+    """f_j = sum over the (taps,)^d window of grid patches at ``base[j]``
+    weighted by the tensor product of per-dim weights (NFFT gathering).
 
-    x: (n,) or (n, c); returns (G,) or (G, c).
+    grid: (P,)*d or (P,)*d + (c,); base: (n, d); weights: (n, d, taps).
     """
-    if x.ndim == 2:
-        vals = weights[..., None] * x[:, None, :]
-        out = jnp.zeros((grid_size, x.shape[1]), dtype=vals.dtype)
-        return out.at[indices.reshape(-1)].add(vals.reshape(-1, x.shape[1]))
-    vals = weights * x[:, None]
-    out = jnp.zeros((grid_size,), dtype=vals.dtype)
-    return out.at[indices.reshape(-1)].add(vals.reshape(-1))
+    n, d, taps = weights.shape
+    batched = grid.ndim == d + 1
+    g2 = grid if batched else grid[..., None]
+    dnums = jax.lax.GatherDimensionNumbers(
+        offset_dims=tuple(range(1, d + 2)),
+        collapsed_slice_dims=(),
+        start_index_map=tuple(range(d)))
+    vals = jax.lax.gather(g2, base, dnums,
+                          slice_sizes=(taps,) * d + (g2.shape[-1],))
+    out = jnp.sum(vals * _weight_cubes(weights)[..., None],
+                  axis=tuple(range(1, d + 1)))
+    return out if batched else out[:, 0]
+
+
+def window_spread_ref(x: Array, base: Array, weights: Array,
+                      padded_size: int) -> Array:
+    """g = separable (taps,)^d windows of x scattered at ``base`` (spreading).
+
+    x: (n,) or (n, c); returns (P,)*d or (P,)*d + (c,).
+    """
+    n, d, taps = weights.shape
+    batched = x.ndim == 2
+    x2 = x if batched else x[:, None]
+    cube = _weight_cubes(weights)
+    updates = cube[..., None] * x2[(slice(None),) + (None,) * d]
+    dnums = jax.lax.ScatterDimensionNumbers(
+        update_window_dims=tuple(range(1, d + 2)),
+        inserted_window_dims=(),
+        scatter_dims_to_operand_dims=tuple(range(d)))
+    out = jnp.zeros((padded_size,) * d + (x2.shape[1],), dtype=updates.dtype)
+    out = jax.lax.scatter_add(out, base, updates, dnums)
+    return out if batched else out[..., 0]
 
 
 def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = False,

@@ -109,3 +109,16 @@ def test_krr_gaussian_and_inverse_multiquadric():
         # fast prediction matches dense prediction
         pred_d = krr_predict_direct(model, jnp.asarray(xte))
         assert float(jnp.max(jnp.abs(pred - pred_d))) < 1e-2
+
+
+def test_training_vector_clamps_small_classes():
+    """A class smaller than n_samples_per_class contributes all its members
+    and nothing else — the argsort over the 2.0 sentinel used to spill into
+    wrong-class nodes and silently label them."""
+    labels = jnp.asarray(np.array([0] * 40 + [1] * 3))
+    f, mask = make_training_vector(labels, 25, 2, key=KEY, positive_class=1)
+    f, mask, labs = np.asarray(f), np.asarray(mask), np.asarray(labels)
+    assert (f[labs == 1] == 1.0).all()          # every class-1 member labeled
+    assert ((f == 1.0) & (labs == 0)).sum() == 0  # no wrong-class positives
+    assert (f[labs == 0] == -1.0).sum() == 25   # class 0 still fully sampled
+    assert mask.sum() == 28 and (f[~mask] == 0.0).all()

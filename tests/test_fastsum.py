@@ -91,6 +91,19 @@ def test_separate_targets():
     assert rel < 1e-5, rel
 
 
+def test_separate_targets_matvec_fails_loudly():
+    """The K(0)-diagonal subtraction is undefined for src != tgt operators:
+    matvec/matvec_reference must raise, not silently subtract."""
+    kern = make_kernel("gaussian", sigma=3.5)
+    tgt = jnp.asarray(RNG.normal(size=(100, 3)) * 3.0)
+    fs = make_fastsum(kern, POINTS_3D, SETUP_2, target_points=tgt)
+    with pytest.raises(ValueError, match="target_points"):
+        fs.matvec(X)
+    with pytest.raises(ValueError, match="target_points"):
+        fs.matvec_reference(X)
+    fs.matvec_tilde(X)  # the rectangular kernel sum itself stays available
+
+
 def test_direct_matvec_tiled_matches_dense():
     kern = make_kernel("gaussian", sigma=3.5)
     ref = dense_weight_matrix(kern, POINTS_3D) @ X

@@ -155,8 +155,10 @@ def test_window_geometry_morton_sorted():
     assert np.all(np.diff(codes) >= 0)  # rows in Morton order
 
 
-def test_window_spread_gather_adjoint():
-    """<gather(g), x> == <g, spread(x)> for the fused window kernels."""
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_window_spread_gather_adjoint(backend):
+    """<gather(g), x> == <g, spread(x)> for the fused window step, on both
+    streaming backends."""
     kern = make_kernel("gaussian", sigma=3.5)
     pts = _points(2)
     fs = make_fastsum(kern, pts, SETUP_1)
@@ -164,9 +166,72 @@ def test_window_spread_gather_adjoint():
     grid = plan.grid_size
     x = jnp.asarray(RNG.normal(size=(N_PTS, 1)))
     g = jnp.asarray(RNG.normal(size=(grid, grid, 1)))
-    lhs = float(jnp.vdot(fastsum_exec.window_gather(plan, win, g), x))
-    rhs = float(jnp.vdot(g, fastsum_exec.window_spread(plan, win, x)))
+    lhs = float(jnp.vdot(
+        fastsum_exec.window_gather(plan, win, g, backend=backend), x))
+    rhs = float(jnp.vdot(
+        g, fastsum_exec.window_spread(plan, win, x, backend=backend)))
     assert abs(lhs - rhs) / abs(lhs) < 1e-12
+
+
+# ------------------------------------------------- streaming window backends
+@pytest.mark.parametrize("kname,kw", KERNELS)
+@pytest.mark.parametrize("d", [1, 2, 3])
+def test_pallas_backend_matches_xla(kname, kw, d):
+    """Fused matvec parity: streaming pallas (interpret) vs streaming xla,
+    all four kernels, d=1..3, single and batched RHS."""
+    kern = make_kernel(kname, **kw)
+    pts = _points(d, n=150)
+    params = FastsumParams(n_bandwidth=16, m=3)
+    fs = make_fastsum(kern, pts, params)
+    for x in (jnp.asarray(RNG.normal(size=(150,))),
+              jnp.asarray(RNG.normal(size=(150, 3)))):
+        via_xla = fs.matvec(x, backend="xla")
+        via_pallas = fs.matvec(x, backend="pallas")
+        rel = float(jnp.max(jnp.abs(via_pallas - via_xla))
+                    / jnp.max(jnp.abs(via_xla)))
+        assert rel < 1e-10, (kname, d, x.shape, rel)
+
+
+def test_backend_auto_resolves_and_rejects():
+    assert fastsum_exec.resolve_backend(None) in ("xla", "pallas")
+    assert fastsum_exec.resolve_backend("auto") == \
+        fastsum_exec.resolve_backend(None)
+    assert fastsum_exec.resolve_backend("xla") == "xla"
+    with pytest.raises(ValueError):
+        fastsum_exec.resolve_backend("cuda")
+
+
+def _lowered_shapes(lowered_text):
+    """All tensor element counts appearing in a lowered StableHLO module."""
+    import re
+    counts = []
+    for m in re.finditer(r"tensor<((?:\d+x)+)(?:f|i|u|complex)", lowered_text):
+        dims = [int(t) for t in m.group(1).split("x") if t]
+        counts.append(int(np.prod(dims)))
+    return counts
+
+
+@pytest.mark.parametrize("d,n", [(2, 4000), (3, 1200)])
+def test_xla_window_step_never_materializes_update_cube(d, n):
+    """The streaming xla path must stay O(tile * taps^d * C): no buffer of
+    the retired whole-window path's (n, taps^d, C) update-cube size may
+    appear anywhere in the lowered fused matvec.  ``n`` is chosen above the
+    tile size so the cube and the streamed tile differ."""
+    kern = make_kernel("gaussian", sigma=3.5)
+    pts = _points(d, n=n)
+    params = FastsumParams(n_bandwidth=16, m=4)
+    fs = make_fastsum(kern, pts, params)
+    assert fastsum_exec._xla_node_tile(n, fs.plan.taps, d) < n
+    x = jnp.asarray(RNG.normal(size=(n, 2)))
+    lowered = jax.jit(
+        lambda mult, src, tgt, xx: fastsum_exec.fused_pipeline(
+            fs.plan, mult, src, tgt, xx, backend="xla")
+    ).lower(fs.multiplier_half, fs.src_window, fs.tgt_window, x)
+    cube_elems = n * fs.plan.taps ** d  # x C would be bigger still
+    shapes = _lowered_shapes(lowered.as_text())
+    assert shapes, "no tensor shapes parsed from the lowered module"
+    assert max(shapes) < cube_elems, (
+        f"buffer with {max(shapes)} elements >= cube size {cube_elems}")
 
 
 def test_unsorted_window_geometry_same_result():

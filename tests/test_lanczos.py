@@ -78,3 +78,18 @@ class TestPaperFigure3Tiers:
                                    rtol=0, atol=1e-7)
         # lambda_1(L_s) = 0 within accuracy
         assert abs(float(res.eigenvalues[0])) < 1e-7
+
+
+def test_block_eigsh_v0_wider_than_shrunk_block():
+    """eigsh(block_size>1, v0=...) used to raise a bare AssertionError when
+    the block-shrinking loop reduced the block below v0's column count
+    (small n, non-dividing block); v0 must be sliced instead."""
+    rng = np.random.default_rng(7)
+    n, k = 10, 4
+    m = rng.normal(size=(n, n))
+    a = jnp.asarray((m + m.T) / 2.0)
+    v0 = jnp.asarray(rng.normal(size=(n, 8)))  # shrinks to block_size=5
+    res = eigsh(lambda x: a @ x, n, k, v0=v0, block_size=8, num_iters=n)
+    ref = np.sort(np.linalg.eigvalsh(np.asarray(a)))[::-1][:k]
+    np.testing.assert_allclose(np.asarray(res.eigenvalues), ref,
+                               rtol=1e-8, atol=1e-8)
