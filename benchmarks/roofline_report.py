@@ -33,9 +33,13 @@ def fmt_b(x: float) -> str:
 
 def render(records: list, *, include_graph: bool = True) -> str:
     lines = []
+    # "payload" = per-device shard payload of the collectives
+    # (hlo_stats.collective_payload_bytes): flat in P for the psum spectral
+    # mode, ~1/P for the pencil cells — the column that shows the drop.
     lines.append("| arch | shape | mesh | kind | compute | memory | "
-                 "collective | dominant | useful/HLO | HBM/dev | DCI |")
-    lines.append("|---|---|---|---|---|---|---|---|---|---|---|")
+                 "collective | payload | dominant | useful/HLO | HBM/dev "
+                 "| DCI |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|---|---|")
     for r in records:
         if r["status"] != "ok":
             continue
@@ -45,10 +49,12 @@ def render(records: list, *, include_graph: bool = True) -> str:
         mem = r.get("memory", {})
         hbm = mem.get("temp_size_in_bytes", 0) + mem.get(
             "argument_size_in_bytes", 0)
+        payload = r.get("hlo_stats", {}).get("collective_payload_bytes", 0.0)
         lines.append(
             f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} "
             f"| {fmt_s(roof['compute_s'])} | {fmt_s(roof['memory_s'])} "
-            f"| {fmt_s(roof['collective_s'])} | **{roof['dominant']}** "
+            f"| {fmt_s(roof['collective_s'])} | {fmt_b(payload)} "
+            f"| **{roof['dominant']}** "
             f"| {roof['useful_flop_ratio']:.3f} | {fmt_b(hbm)} "
             f"| {fmt_b(roof['dci_bytes'])} |")
     skipped = [r for r in records if r["status"] == "skipped"]

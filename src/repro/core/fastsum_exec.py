@@ -271,26 +271,41 @@ def window_gather(plan: NfftPlan, geometry: WindowGeometry, g: Array, *,
 
 def fused_pipeline(plan: NfftPlan, multiplier_half: Array,
                    src: WindowGeometry, tgt: WindowGeometry, x: Array,
-                   spectral_reduce=None, backend: str | None = None) -> Array:
+                   spectral_reduce=None, backend: str | None = None,
+                   spectral_op=None) -> Array:
     """spread -> rfftn -> multiply -> irfftn -> gather, one traceable body.
 
-    ``spectral_reduce``, when given, is applied to the support block of the
-    multiplied half-spectrum (see :func:`spectral_support`) — the hook the
-    distributed matvec uses to psum the one cross-shard accumulation, so the
-    local and distributed pipelines share this single implementation.
+    Two hooks let the distributed matvec reuse this single implementation
+    (so the local and distributed pipelines cannot drift apart):
+
+    * ``spectral_reduce`` is applied to the support block of the multiplied
+      half-spectrum (see :func:`spectral_support`) — the psum spectral mode's
+      one cross-shard accumulation.
+    * ``spectral_op``, when given, replaces the whole rfftn -> multiply ->
+      irfftn mid-section: it maps the spread grid ``(M,)*d + (C,)`` (real,
+      FFT order) to the inverse-transformed grid of the same shape.  The
+      pencil spectral mode uses it to run the reduce-scattered, slab-sharded
+      transform of :mod:`repro.dist.pencil_fft`; ``multiplier_half`` and
+      ``spectral_reduce`` are ignored in that case (the op owns the
+      multiply).
+
     ``backend`` selects the window-step backend (see :func:`resolve_backend`).
     """
     d = plan.d
     batched = x.ndim == 2
     xb = x if batched else x[:, None]
     g = window_spread(plan, src, xb, backend=backend)
-    g_hat = jnp.fft.rfftn(g, axes=tuple(range(d)))
-    g_hat = g_hat * multiplier_half.astype(g_hat.dtype)[..., None]
-    if spectral_reduce is not None:
-        sup = jnp.meshgrid(*spectral_support(plan), indexing="ij")
-        block = spectral_reduce(g_hat[tuple(sup)])
-        g_hat = jnp.zeros_like(g_hat).at[tuple(sup)].set(block)
-    y = jnp.fft.irfftn(g_hat, s=(plan.grid_size,) * d, axes=tuple(range(d)))
+    if spectral_op is not None:
+        y = spectral_op(g)
+    else:
+        g_hat = jnp.fft.rfftn(g, axes=tuple(range(d)))
+        g_hat = g_hat * multiplier_half.astype(g_hat.dtype)[..., None]
+        if spectral_reduce is not None:
+            sup = jnp.meshgrid(*spectral_support(plan), indexing="ij")
+            block = spectral_reduce(g_hat[tuple(sup)])
+            g_hat = jnp.zeros_like(g_hat).at[tuple(sup)].set(block)
+        y = jnp.fft.irfftn(g_hat, s=(plan.grid_size,) * d,
+                           axes=tuple(range(d)))
     out = window_gather(plan, tgt, y.astype(xb.dtype), backend=backend)
     return out if batched else out[..., 0]
 

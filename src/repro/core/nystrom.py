@@ -93,11 +93,23 @@ def nystrom_traditional(kernel: Kernel, points: Array, k: int, sample_size: int,
 
 def nystrom_gaussian_nfft(adjacency: NormalizedAdjacencyOperator, k: int,
                           *, num_columns: int, rank: int | None = None,
-                          key: Array) -> NystromResult:
+                          key: Array,
+                          sigma_tol: float | None = None) -> NystromResult:
     """Algorithm 5.1 — hybrid Nyström-Gaussian-NFFT.
 
     ``num_columns`` = L Gaussian probe columns, ``rank`` = M >= k (default k).
     All 2L matvecs with A go through the NFFT fast summation.
+
+    ``sigma_tol``: relative floor for the core-matrix inversion.  A is
+    indefinite, so trailing Ritz values ``sigma_m`` of ``Q^T A Q`` can land
+    near zero by +/- cancellation (or go negative) — with ``|A Q u_j|``
+    *not* correspondingly small — and ``R diag(1/sigma_m) R^T`` blows up by
+    ``1/sigma`` (observed: eigenvalue 3.8 from a normalized adjacency whose
+    spectrum lies in [-1, 1]).  Directions with ``sigma <= sigma_tol *
+    sigma_max`` are truncated pseudo-inverse style (their inverse set to 0 —
+    shape-stable, jit-friendly).  The default 1e-3 sits below anything a
+    tens-of-columns sketch resolves credibly but above the cancellation
+    band; pass a smaller tol for large-L high-accuracy PSD-like runs.
     """
     m_rank = k if rank is None else rank
     n = adjacency.n
@@ -118,7 +130,13 @@ def nystrom_gaussian_nfft(adjacency: NormalizedAdjacencyOperator, k: int,
     u_m = u[:, order]
 
     q_hat, r_hat = jnp.linalg.qr(b1 @ u_m)  # step 6
-    core = r_hat @ jnp.diag(1.0 / sigma_m) @ r_hat.T  # step 7
+    # adaptive rank truncation: only sigma above the tol * sigma_max floor
+    # are inverted; near-zero / negative trailing Ritz values would
+    # otherwise dominate the core matrix by 1/sigma.
+    tol = 1e-3 if sigma_tol is None else sigma_tol
+    keep = sigma_m > tol * jnp.max(jnp.abs(sigma_m))
+    inv_sigma = jnp.where(keep, 1.0 / jnp.where(keep, sigma_m, 1.0), 0.0)
+    core = (r_hat * inv_sigma[None, :]) @ r_hat.T  # step 7
     core = (core + core.T) / 2.0
     lam, u_hat = jnp.linalg.eigh(core)
     order2 = jnp.argsort(-lam)[:k]  # step 8

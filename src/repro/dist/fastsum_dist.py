@@ -5,21 +5,33 @@ The dense kernel matvec ``y = W̃ x`` factors as
     spread  ->  FFT  ->  spectral multiply  ->  IFFT  ->  gather
 
 and only the spectral accumulation couples nodes across shards.  We shard
-the *node* dimension: each device spreads its local nodes onto the
-oversampled grid and runs the real-to-complex FFT locally, a single
-``psum`` over the mesh axes of the *support block* of the multiplied
-half-spectrum completes the reduction (the transform is linear in the
-nodes, so summing per-shard coefficients is exact), and the inverse FFT +
-gather back to the local nodes are again purely local.
+the *node* dimension and offer two spectral modes for that one cross-shard
+accumulation (``distributed_matvec_fn(..., spectral_mode=...)``):
 
-The fused engine's combined multiplier is zero outside the embedded
-``I_N^d`` block, and the real half-spectrum halves it again, so the
-all-reduce payload is ~``N^d/2`` complex — half the seed's full ``N^d``
-psum — independent of ``n``: the O(n/P)-local + O(grid)-allreduce pattern
-the dry-run cells measure at 512 chips.
+``"psum"`` (default)
+    Each device spreads its local nodes onto the oversampled grid and runs
+    the real-to-complex FFT locally; a single ``psum`` over the mesh axes of
+    the *support block* of the multiplied half-spectrum (~``N^d/2`` complex,
+    independent of ``n``) completes the reduction, and the inverse FFT +
+    gather are again purely local.  Per-device spectrum memory and wire
+    payload are constant in the mesh size.
+
+``"pencil"``
+    The transform itself is sharded (:mod:`repro.dist.pencil_fft`): the
+    cross-shard accumulation becomes a ``reduce_scatter`` of the spread grid
+    into per-device pencils, the distributed rfftn runs local trailing-axis
+    FFTs plus ``all_to_all`` transposes, the spectral multiply hits each
+    device's multiplier *slab*, and an ``all_gather`` of the
+    inverse-transformed pencils feeds the local window gather.  Per-device
+    spectrum memory, FFT flops, and collective payload all scale ~1/P with
+    the pencil group size — the regime past ~64 devices where the psum
+    payload stops improving.  ``d = 1`` has no trailing axis to keep local
+    and falls back to the psum path, as does a mesh where no axis divides
+    the grid (a degenerate pencil would psum the full grid — strictly
+    worse).
 
 ``_spectral_matvec_local`` keeps the seed two-NFFT body (full ``N^d``
-psum); it survives as the oracle and is what the dry-run cells lower.
+psum); it survives only as an oracle.
 """
 
 from __future__ import annotations
@@ -33,22 +45,23 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import fastsum_exec, nfft as nfft_mod
 from repro.core.nfft import NfftGeometry, NfftPlan, WindowGeometry
+from repro.dist import pencil_fft
 from repro.dist.compat import shard_map
 
 Array = jax.Array
+
+SPECTRAL_MODES = ("psum", "pencil")
 
 
 def _spectral_matvec_local(plan: NfftPlan, b_hat: Array,
                            geometry: NfftGeometry, x: Array,
                            axes: tuple[str, ...],
                            tgt_geometry: NfftGeometry | None = None) -> Array:
-    """Per-shard body of the distributed matvec (runs inside shard_map).
+    """Per-shard body of the seed two-NFFT distributed matvec (oracle only).
 
     ``geometry``/``x`` hold this shard's slice of the node dimension;
     ``b_hat`` is replicated.  The one cross-shard collective is the psum of
-    the adjoint's spectral coefficients — the accumulation that crosses
-    shards.  Both transforms reuse the single-device NFFT kernels, so the
-    distributed and local matvecs cannot drift apart.
+    the adjoint's full ``N^d`` spectral coefficients.
     """
     tgt = geometry if tgt_geometry is None else tgt_geometry
     x_hat = nfft_mod.nfft_adjoint(plan, geometry, x)
@@ -63,15 +76,12 @@ def _fused_matvec_local(plan: NfftPlan, mult_half: Array,
                         geometry: WindowGeometry, x: Array,
                         axes: tuple[str, ...],
                         backend: str | None = None) -> Array:
-    """Per-shard body of the fused distributed matvec (inside shard_map).
+    """Per-shard psum-mode body of the fused distributed matvec.
 
-    ``geometry``/``x`` hold this shard's slice of the (Morton-sorted) node
-    dimension; the multiplier is replicated.  The one cross-shard collective
-    is the psum of the multiplied half-spectrum restricted to the
-    multiplier's support block (~N^d/2 complex: the entire wire payload),
-    injected into the shared single-device pipeline via its
-    ``spectral_reduce`` hook — the distributed and local matvecs literally
-    run the same body and cannot drift apart.
+    The one cross-shard collective is the psum of the multiplied
+    half-spectrum restricted to the multiplier's support block (~N^d/2
+    complex: the entire wire payload), injected into the shared
+    single-device pipeline via its ``spectral_reduce`` hook.
     """
     reduce = (lambda block: jax.lax.psum(block, axes)) if axes else None
     return fastsum_exec.fused_pipeline(plan, mult_half, geometry, geometry,
@@ -79,7 +89,85 @@ def _fused_matvec_local(plan: NfftPlan, mult_half: Array,
                                        backend=backend)
 
 
-def distributed_matvec_fn(op, mesh, axes, *, backend: str | None = None):
+def _pencil_matvec_local(plan: NfftPlan, mult_half: Array,
+                         geometry: WindowGeometry, x: Array,
+                         spec: pencil_fft.PencilSpec,
+                         backend: str | None = None) -> Array:
+    """Per-shard pencil-mode body: the ``spectral_op`` hook replaces the
+    whole rfftn -> multiply -> irfftn mid-section with the reduce-scattered,
+    slab-sharded transform."""
+
+    def spectral_op(g):
+        pencil = pencil_fft.pencil_accumulate(g, spec)
+        gh = pencil_fft.pencil_rfftn(pencil, spec)
+        slab = pencil_fft.multiplier_slab(mult_half, spec)
+        gh = gh * slab.astype(gh.dtype)[..., None]
+        y = pencil_fft.pencil_irfftn(gh, spec)
+        return pencil_fft.pencil_allgather(y, spec).astype(g.dtype)
+
+    return fastsum_exec.fused_pipeline(plan, mult_half, geometry, geometry,
+                                       x, backend=backend,
+                                       spectral_op=spectral_op)
+
+
+def resolve_pencil_spec(plan: NfftPlan, mesh, axes, pencil_axes=None):
+    """PencilSpec the pencil mode would use, or None when it degenerates.
+
+    None means the psum path runs instead: d = 1 (no trailing axis to keep
+    local), or a mesh where no axis divides the grid (a degenerate pencil
+    would psum the full grid — strictly worse than the support-block psum).
+    Callers that label artifacts by spectral mode should consult this to
+    report the *effective* mode.
+    """
+    if plan.d < 2:
+        return None
+    spec = pencil_fft.make_pencil_spec(mesh, tuple(axes), plan.grid_size,
+                                       plan.d, pencil_axes=pencil_axes)
+    return None if spec.row_size * spec.col_size == 1 else spec
+
+
+def make_sharded_matvec(plan: NfftPlan, mesh, axes, *,
+                        spectral_mode: str = "psum",
+                        backend: str | None = None, pencil_axes=None,
+                        jit: bool = True):
+    """shard_map'd matvec body ``(mult_half, base, w1d, x) -> y`` (row order).
+
+    Operands 1..3 are sharded along the node dimension over ``axes``; the
+    multiplier is replicated.  Shared by :func:`distributed_matvec_fn` and
+    the dry-run graph cells, so what the 512-chip cells lower is literally
+    the shipped matvec.  ``jit=False`` returns the bare shard_map'd function
+    (the dry-run jits it with explicit in_shardings).
+    """
+    axes = tuple(axes)
+    if spectral_mode not in SPECTRAL_MODES:
+        raise ValueError(
+            f"spectral_mode must be one of {SPECTRAL_MODES}, "
+            f"got {spectral_mode!r}")
+    spec = None
+    if spectral_mode == "pencil":
+        spec = resolve_pencil_spec(plan, mesh, axes, pencil_axes)
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(), P(axes, None), P(axes, None, None),
+                                 P(axes, None)),
+                       out_specs=P(axes, None), check_rep=False)
+    def _mv(mult_half, base_, w_, x_):
+        # rows are globally Morton-sorted; the caller pre-permutes x, so the
+        # per-shard geometry uses an identity perm over its local rows.
+        local = WindowGeometry(
+            base=base_, weights=w_,
+            perm=jnp.arange(base_.shape[0], dtype=jnp.int32))
+        if spec is not None:
+            return _pencil_matvec_local(plan, mult_half, local, x_, spec,
+                                        backend=backend)
+        return _fused_matvec_local(plan, mult_half, local, x_, axes,
+                                   backend=backend)
+
+    return jax.jit(_mv) if jit else _mv
+
+
+def distributed_matvec_fn(op, mesh, axes, *, backend: str | None = None,
+                          spectral_mode: str = "psum", pencil_axes=None):
     """Sharded drop-in for ``op.matvec`` (op: :class:`FastsumOperator`).
 
     Returns ``mv(x)`` computing ``W x = (W̃ - K(0) I) x`` for ``x`` of shape
@@ -87,7 +175,9 @@ def distributed_matvec_fn(op, mesh, axes, *, backend: str | None = None):
     ``mesh``.  The node count is padded with zero-weight ghost nodes to a
     multiple of the shard count, so any (n, mesh) combination works.
     ``backend`` selects the per-shard window-step backend (default "auto":
-    pallas on TPU, xla elsewhere).
+    pallas on TPU, xla elsewhere); ``spectral_mode`` selects the cross-shard
+    spectral accumulation (see module docstring); ``pencil_axes`` optionally
+    overrides the pencil row/col mesh-axis split.
     """
     plan = op.plan
     axes = tuple(axes)
@@ -112,20 +202,8 @@ def distributed_matvec_fn(op, mesh, axes, *, backend: str | None = None):
         perm = jnp.concatenate(
             [perm, jnp.arange(n, n + pad, dtype=perm.dtype)])
 
-    spec_geom = P(axes, *([None] * (w1d.ndim - 1)))
-
-    @jax.jit
-    @functools.partial(shard_map, mesh=mesh,
-                       in_specs=(P(), P(axes, None), spec_geom, P(axes, None)),
-                       out_specs=P(axes, None), check_rep=False)
-    def _mv(mult_half, base_, w_, x_):
-        # rows are globally Morton-sorted; the caller pre-permutes x, so the
-        # per-shard geometry uses an identity perm over its local rows.
-        local = WindowGeometry(
-            base=base_, weights=w_,
-            perm=jnp.arange(base_.shape[0], dtype=jnp.int32))
-        return _fused_matvec_local(plan, mult_half, local, x_, axes,
-                                   backend=backend)
+    _mv = make_sharded_matvec(plan, mesh, axes, spectral_mode=spectral_mode,
+                              backend=backend, pencil_axes=pencil_axes)
 
     out_scale = op.output_scale
     k0 = op.kernel_at_zero

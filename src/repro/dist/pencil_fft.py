@@ -1,0 +1,244 @@
+"""Pencil-decomposed distributed real FFT (sharded spectrum past 64 devices).
+
+The psum spectral mode of :mod:`repro.dist.fastsum_dist` keeps the full
+oversampled grid on every device and all-reduces the multiplied
+half-spectrum's support block — per-device spectrum memory and wire payload
+stop improving as the mesh grows.  This module shards the transform itself:
+
+    forward (``pencil_rfftn``), grid sharded along its leading axes:
+        local rfftn over the unsharded trailing axes
+        -> all_to_all transpose (spectrum axis <-> grid axis 1)
+        -> FFT along grid axis 1
+        -> all_to_all transpose (grid axis 1 <-> grid axis 0)
+        -> FFT along the formerly sharded leading axis.
+    inverse (``pencil_irfftn``) mirrors the forward exactly.
+
+Sharding is described by a :class:`PencilSpec`: grid axis 0 is sharded over
+the ``row`` mesh-axis group (size R <= M) and — for d >= 3 — grid axis 1
+over the ``col`` group (size C <= M), so up to M^2 devices hold
+(M/R, M/C, M, ...) pencils; a slab decomposition (col empty) caps at M
+devices.  Mesh axes that fit in neither group land in ``extra`` and are
+closed by a plain psum on the already-scattered pencil (cheap: the operand
+is the pencil, not the grid).  d = 1 has no trailing axis to keep local, so
+callers fall back to the psum mode.
+
+All functions run *inside* ``shard_map``.  Group order follows jax's
+convention for multi-name collectives (first axis name is major), which
+:func:`group_index` reproduces so multiplier slabs line up with
+``psum_scatter``/``all_gather`` block placement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PencilSpec:
+    """Static description of how the oversampled grid is penciled.
+
+    ``row_axes``/``col_axes`` shard grid axes 0/1 (sizes must divide the
+    grid); ``extra_axes`` are the remaining node-shard mesh axes whose
+    partial sums are closed by psum.  Hashable, so it can be closed over by
+    jit/shard_map traces.
+    """
+
+    d: int
+    grid: int  # oversampled grid size M per dimension
+    row_axes: tuple[str, ...]
+    row_sizes: tuple[int, ...]
+    col_axes: tuple[str, ...] = ()
+    col_sizes: tuple[int, ...] = ()
+    extra_axes: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        assert self.d >= 2, "pencil decomposition needs a trailing grid axis"
+        assert self.grid % self.row_size == 0, (self.grid, self.row_axes)
+        assert self.grid % self.col_size == 0, (self.grid, self.col_axes)
+        assert not (self.col_axes and self.d < 3), \
+            "d=2 has a single shardable grid axis (slab decomposition only)"
+
+    @property
+    def row_size(self) -> int:
+        return int(np.prod(self.row_sizes)) if self.row_axes else 1
+
+    @property
+    def col_size(self) -> int:
+        return int(np.prod(self.col_sizes)) if self.col_axes else 1
+
+    @property
+    def half(self) -> int:
+        """rfft-axis length K = M//2 + 1."""
+        return self.grid // 2 + 1
+
+    def padded_half(self, group: int) -> int:
+        """K rounded up so the rfft axis splits evenly over ``group``."""
+        return -(-self.half // group) * group
+
+
+def make_pencil_spec(mesh, axes, grid: int, d: int, *,
+                     pencil_axes=None) -> PencilSpec:
+    """Partition the node-shard mesh ``axes`` into row/col/extra groups.
+
+    Greedy: each axis (in order) joins the row group if the grown product
+    still divides ``grid``, else — for d >= 3 — the col group likewise;
+    axes that fit neither become extra (psum) axes.  ``pencil_axes=
+    (row_axes, col_axes)`` overrides the split explicitly (must be disjoint
+    subsets of ``axes``).
+    """
+    axes = tuple(axes)
+    sizes = {a: int(mesh.shape[a]) for a in axes}
+    if pencil_axes is not None:
+        row, col = (tuple(pencil_axes[0]), tuple(pencil_axes[1]))
+        assert set(row) | set(col) <= set(axes) and not set(row) & set(col), \
+            (row, col, axes)
+    else:
+        row, col = [], []
+        prods = {0: 1, 1: 1}
+        for a in axes:
+            for group, target in ((row, 0),) + (((col, 1),) if d >= 3 else ()):
+                grown = prods[target] * sizes[a]
+                if grown <= grid and grid % grown == 0:
+                    prods[target] = grown
+                    group.append(a)
+                    break
+        row, col = tuple(row), tuple(col)
+    extra = tuple(a for a in axes if a not in row and a not in col)
+    return PencilSpec(
+        d=d, grid=grid,
+        row_axes=row, row_sizes=tuple(sizes[a] for a in row),
+        col_axes=col, col_sizes=tuple(sizes[a] for a in col),
+        extra_axes=extra)
+
+
+def group_index(axes: tuple[str, ...], sizes: tuple[int, ...]) -> Array:
+    """Flattened position of this device in the axis group (first name major).
+
+    Matches the linearization jax collectives use for multi-name groups, so
+    the index addresses the same block ``psum_scatter``/``all_gather``
+    assign to this device.
+    """
+    idx = jnp.zeros((), jnp.int32)
+    for name, size in zip(axes, sizes):
+        idx = idx * size + jax.lax.axis_index(name)
+    return idx
+
+
+def _a2a(x: Array, axes, sizes, split_axis: int, concat_axis: int) -> Array:
+    if not axes or int(np.prod(sizes)) == 1:
+        return x  # size-1 group: tiled all_to_all is the identity
+    return jax.lax.all_to_all(x, axes, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+
+def pencil_accumulate(g: Array, spec: PencilSpec) -> Array:
+    """Sum per-shard spread grids across the mesh, scattered into pencils.
+
+    ``g``: this shard's full local grid ``(M,)*d + (C,)``.  Returns this
+    device's ``(M/R, M/C, M, ..., M, C)`` pencil of the global sum.  The
+    scatters run first so the residual psum over the extra axes moves
+    pencils, not grids.
+    """
+    if spec.row_axes and spec.row_size > 1:
+        g = jax.lax.psum_scatter(g, spec.row_axes, scatter_dimension=0,
+                                 tiled=True)
+    if spec.col_axes and spec.col_size > 1:
+        g = jax.lax.psum_scatter(g, spec.col_axes, scatter_dimension=1,
+                                 tiled=True)
+    if spec.extra_axes:
+        g = jax.lax.psum(g, spec.extra_axes)
+    return g
+
+
+def pencil_allgather(y: Array, spec: PencilSpec) -> Array:
+    """Reassemble the full local grid from per-device pencils (inverse of
+    the scatter half of :func:`pencil_accumulate`)."""
+    if spec.col_axes and spec.col_size > 1:
+        y = jax.lax.all_gather(y, spec.col_axes, axis=1, tiled=True)
+    if spec.row_axes and spec.row_size > 1:
+        y = jax.lax.all_gather(y, spec.row_axes, axis=0, tiled=True)
+    return y
+
+
+def pencil_rfftn(g: Array, spec: PencilSpec) -> Array:
+    """Distributed rfftn of a grid pencil (real -> half-spectrum slab).
+
+    Input: ``(M/R, M/C, M, ..., M, C)`` real pencil (d=2: ``(M/R, M, C)``).
+    Output layout (grid axes keep their identity; only the sharding moves):
+
+        d == 2 : ``(M, Kp/R, C)``          axis 1 = padded rfft axis, row-sharded
+        d >= 3 : ``(M, M/R, M, ..., Kp/C, C)``  axis 1 row-sharded, last
+                 grid axis = padded rfft axis, col-sharded
+
+    with ``Kp = padded_half(group)`` (K = M//2+1 zero-padded so it splits
+    evenly; the pad carries exact zeros end to end).
+    """
+    d, R, C = spec.d, spec.row_size, spec.col_size
+    if d == 2:
+        h = jnp.fft.rfft(g, axis=1)
+        if R > 1:
+            pad = spec.padded_half(R) - spec.half
+            h = jnp.pad(h, [(0, 0), (0, pad), (0, 0)])
+            h = _a2a(h, spec.row_axes, spec.row_sizes, 1, 0)
+        return jnp.fft.fft(h, axis=0)
+    h = jnp.fft.rfftn(g, axes=tuple(range(2, d)))
+    if C > 1:
+        pad = spec.padded_half(C) - spec.half
+        h = jnp.pad(h, [(0, 0)] * (d - 1) + [(0, pad), (0, 0)])
+        h = _a2a(h, spec.col_axes, spec.col_sizes, d - 1, 1)
+    h = jnp.fft.fft(h, axis=1)
+    if R > 1:
+        h = _a2a(h, spec.row_axes, spec.row_sizes, 1, 0)
+    return jnp.fft.fft(h, axis=0)
+
+
+def pencil_irfftn(gh: Array, spec: PencilSpec) -> Array:
+    """Exact mirror of :func:`pencil_rfftn` (half-spectrum slab -> real)."""
+    d, R, C, grid = spec.d, spec.row_size, spec.col_size, spec.grid
+    if d == 2:
+        h = jnp.fft.ifft(gh, axis=0)
+        if R > 1:
+            h = _a2a(h, spec.row_axes, spec.row_sizes, 0, 1)
+            h = h[:, : spec.half]
+        return jnp.fft.irfft(h, n=grid, axis=1)
+    h = jnp.fft.ifft(gh, axis=0)
+    if R > 1:
+        h = _a2a(h, spec.row_axes, spec.row_sizes, 0, 1)
+    h = jnp.fft.ifft(h, axis=1)
+    if C > 1:
+        h = _a2a(h, spec.col_axes, spec.col_sizes, 1, d - 1)
+        h = h[..., : spec.half, :]
+    return jnp.fft.irfftn(h, s=(grid,) * (d - 2), axes=tuple(range(2, d)))
+
+
+def multiplier_slab(mult_half: Array, spec: PencilSpec) -> Array:
+    """This device's slab of the fused spectral multiplier.
+
+    ``mult_half``: replicated ``(M,)*(d-1) + (K,)`` half-spectrum multiplier
+    (FFT order).  Returns the block matching the :func:`pencil_rfftn` output
+    layout for this device (dynamic-sliced by :func:`group_index`, rfft axis
+    zero-padded like the spectrum so pad bins multiply to exact zeros).
+    """
+    d, grid = spec.d, spec.grid
+    r = group_index(spec.row_axes, spec.row_sizes)
+    if d == 2:
+        kp = spec.padded_half(spec.row_size)
+        m = jnp.pad(mult_half, [(0, 0), (0, kp - spec.half)])
+        s = kp // spec.row_size
+        return jax.lax.dynamic_slice(m, (jnp.zeros((), jnp.int32), r * s),
+                                     (grid, s))
+    kp = spec.padded_half(spec.col_size)
+    m = jnp.pad(mult_half, [(0, 0)] * (d - 1) + [(0, kp - spec.half)])
+    c = group_index(spec.col_axes, spec.col_sizes)
+    s = kp // spec.col_size
+    zero = jnp.zeros((), jnp.int32)
+    starts = (zero, r * (grid // spec.row_size)) + (zero,) * (d - 3) \
+        + (c * s,)
+    sizes = (grid, grid // spec.row_size) + (grid,) * (d - 3) + (s,)
+    return jax.lax.dynamic_slice(m, starts, sizes)

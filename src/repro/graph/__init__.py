@@ -5,4 +5,5 @@ from repro.graph.ssl import (  # noqa: F401
     allen_cahn_ssl, allen_cahn_multiclass, kernel_ssl_cg, kernel_ssl_eig,
     make_training_vector,
 )
-from repro.graph.krr import krr_fit, krr_predict, krr_predict_direct  # noqa: F401
+from repro.graph.krr import (  # noqa: F401
+    krr_fit, krr_predict, krr_predict_direct, krr_prediction_operator)

@@ -27,6 +27,9 @@ class KRRModel(NamedTuple):
     params: FastsumParams
     num_iters: Array
     converged: Array
+    # single-slot serving cache {"target": (new_points, FastsumOperator)};
+    # mutable on purpose (shared by every copy of this immutable model).
+    pred_cache: dict | None = None
 
 
 def krr_fit(kernel: Kernel, points: Array, f: Array, beta: float,
@@ -42,13 +45,44 @@ def krr_fit(kernel: Kernel, points: Array, f: Array, beta: float,
     sol = cg(matvec, f, tol=tol, maxiter=maxiter)
     return KRRModel(alpha=sol.x, train_points=points, kernel=kernel,
                     params=params, num_iters=sol.num_iters,
-                    converged=sol.converged)
+                    converged=sol.converged, pred_cache={})
 
 
-def krr_predict(model: KRRModel, new_points: Array) -> Array:
-    """F(x) = sum_i alpha_i K(x_i - x) via separate-target fast summation."""
+def krr_prediction_operator(model: KRRModel, new_points: Array):
+    """Plan-once prediction operator for ``new_points`` (serving hot path).
+
+    Building the separate-target fast summation means recomputing the kernel
+    Fourier coefficients, the Morton-sorted window geometries, and the fused
+    spectral multiplier — none of which depend on ``alpha``.  The operator
+    is cached on the model (single slot, keyed by target identity), so
+    repeated predicts against the same target set plan once and only pay the
+    O(n + m) pipeline per call.
+    """
+    cache = model.pred_cache
+    # the dict is shared by NamedTuple._replace copies, so a hit must match
+    # everything the operator was built from, not just the target points
+    key = (new_points, model.train_points, model.kernel, model.params)
+    if cache is not None:
+        hit = cache.get("target")
+        if (hit is not None and hit[0] is key[0] and hit[1] is key[1]
+                and hit[2] == key[2] and hit[3] == key[3]):
+            return hit[4]
     op = make_fastsum(model.kernel, model.train_points, model.params,
                       target_points=new_points)
+    if cache is not None:
+        cache["target"] = key + (op,)
+    return op
+
+
+def krr_predict(model: KRRModel, new_points: Array, *, op=None) -> Array:
+    """F(x) = sum_i alpha_i K(x_i - x) via separate-target fast summation.
+
+    The prediction operator is planned once per target set and cached on the
+    model (see :func:`krr_prediction_operator`); pass a prebuilt ``op`` to
+    manage caching yourself.
+    """
+    if op is None:
+        op = krr_prediction_operator(model, new_points)
     return op.matvec_tilde(model.alpha)
 
 

@@ -16,10 +16,14 @@ collective schedule parsed from the optimized per-device HLO, and the three
 roofline terms (launch/roofline.py).  Results go to JSON for
 EXPERIMENTS.md §Dry-run / §Roofline.
 
-Also includes the *paper-technique* cells (``graph-fastsum-*``): the
-distributed NFFT fast-summation matvec (dist/fastsum_dist.py) lowered on the
-same meshes with node counts up to 2^27, proving the O(n/P)-local +
-O(grid)-allreduce communication pattern shards to 512 chips.
+Also includes the *paper-technique* cells (``graph-fastsum-*`` and
+``graph-fastsum-pencil-*``): the shipped fused distributed NFFT fast-
+summation matvec (dist/fastsum_dist.py) lowered on the same meshes with
+node counts up to 2^27, in both spectral modes — the psum cells prove the
+O(n/P)-local + O(half-spectrum)-allreduce pattern shards to 512 chips; the
+pencil cells record the per-device collective-payload drop
+(``collective_payload_bytes``, ~1/P) from reduce-scattering the spectrum
+into pencils.
 """
 
 import argparse
@@ -131,47 +135,61 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, *,
 # ---------------------------------------------------------------------------
 
 def run_graph_cell(n_nodes: int, d: int, multi_pod: bool, *,
-                   setup_name: str = "setup2") -> dict:
-    """Lower the distributed Algorithm 3.1 matvec at cluster scale."""
+                   setup_name: str = "setup2", spectral_mode: str = "psum",
+                   mesh=None) -> dict:
+    """Lower the distributed Algorithm 3.1 matvec at cluster scale.
+
+    Lowers the *shipped* fused per-shard body (``dist.fastsum_dist.
+    make_sharded_matvec``) — half-spectrum support-block psum in
+    ``spectral_mode="psum"``, reduce-scattered pencil FFT in ``"pencil"`` —
+    so the 512-chip cells measure exactly what the runtime executes.
+    ``mesh`` overrides the production mesh (small-mesh subprocess tests).
+    """
     from repro.core.fastsum import SETUP_1, SETUP_2, SETUP_3
-    from repro.core.nfft import NfftGeometry, NfftPlan
-    from repro.dist.compat import shard_map
-    from repro.dist.fastsum_dist import _spectral_matvec_local
+    from repro.dist import fastsum_dist
     from jax.sharding import PartitionSpec as P
-    import functools
 
     params = {"setup1": SETUP_1, "setup2": SETUP_2, "setup3": SETUP_3}[setup_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh_chip_count(mesh)
     axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
     plan = params.nfft_plan(d)
-    taps = plan.taps ** d
+    grid, taps = plan.grid_size, plan.taps
+    tag = "-pencil" if spectral_mode == "pencil" else ""
+    # "pencil" silently runs the psum body when the mesh can't pencil the
+    # grid — record the *effective* mode so a fallback cell can't publish
+    # flat psum stats under the pencil label
+    effective = spectral_mode
+    if spectral_mode == "pencil" and fastsum_dist.resolve_pencil_spec(
+            plan, mesh, axes) is None:
+        effective = "psum"
+    n_nodes += (-n_nodes) % chips  # ghost-pad so the node dim shards evenly
     rec = {
-        "arch": f"graph-fastsum-{setup_name}-d{d}",
+        "arch": f"graph-fastsum{tag}-{setup_name}-d{d}",
         "shape": f"n{n_nodes}", "mesh": "x".join(map(str, mesh.shape.values())),
         "chips": chips, "kind": "graph_matvec",
+        "spectral_mode": spectral_mode,
+        "spectral_mode_effective": effective,
     }
     try:
-        b_hat = jax.ShapeDtypeStruct((plan.n_bandwidth,) * d, jnp.complex64)
-        indices = jax.ShapeDtypeStruct((n_nodes, taps), jnp.int32)
-        weights = jax.ShapeDtypeStruct((n_nodes, taps), jnp.float32)
-        x = jax.ShapeDtypeStruct((n_nodes,), jnp.float32)
+        mult = jax.ShapeDtypeStruct((grid,) * (d - 1) + (grid // 2 + 1,),
+                                    jnp.complex64)
+        base = jax.ShapeDtypeStruct((n_nodes, d), jnp.int32)
+        w1d = jax.ShapeDtypeStruct((n_nodes, d, taps), jnp.float32)
+        x = jax.ShapeDtypeStruct((n_nodes, 1), jnp.float32)
 
-        @functools.partial(shard_map, mesh=mesh,
-                           in_specs=(P(), P(axes, None), P(axes, None),
-                                     P(axes)),
-                           out_specs=P(axes), check_vma=False)
-        def matvec(b_hat_, idx_, w_, x_):
-            g = NfftGeometry(indices=idx_, weights=w_)
-            return _spectral_matvec_local(plan, b_hat_, g, x_, axes)
+        matvec = fastsum_dist.make_sharded_matvec(
+            plan, mesh, axes, spectral_mode=spectral_mode, jit=False)
 
         from repro.dist.sharding import named
         in_sh = (named(mesh, P()), named(mesh, P(axes, None)),
-                 named(mesh, P(axes, None)), named(mesh, P(axes)))
+                 named(mesh, P(axes, None, None)), named(mesh, P(axes, None)))
         t0 = time.perf_counter()
         lowered = jax.jit(
-            matvec, in_shardings=in_sh, out_shardings=named(mesh, P(axes))
-        ).lower(b_hat, indices, weights, x)
+            matvec, in_shardings=in_sh,
+            out_shardings=named(mesh, P(axes, None))
+        ).lower(mult, base, w1d, x)
         t1 = time.perf_counter()
         compiled = lowered.compile()
         t2 = time.perf_counter()
@@ -187,7 +205,7 @@ def run_graph_cell(n_nodes: int, d: int, multi_pod: bool, *,
                    memory=_memory_analysis_dict(compiled),
                    cost_analysis_raw=cost,
                    hlo_stats=stats.to_json(), roofline=roof.to_json(),
-                   grid=plan.grid_size, bandwidth=plan.n_bandwidth, d=d)
+                   grid=grid, bandwidth=plan.n_bandwidth, d=d)
     except Exception as e:  # noqa: BLE001
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-2000:])
@@ -250,10 +268,18 @@ def main() -> None:
     if args.graph:
         for mp in meshes:
             for setup in ("setup1", "setup2", "setup3"):
-                rec = run_graph_cell(args.graph_n, 3, mp, setup_name=setup)
-                results.append(rec)
-                print(f"[{rec['status']:7s}] {rec['arch']} x {rec['shape']}"
-                      f" @ {rec['mesh']}", flush=True)
+                for mode in ("psum", "pencil"):
+                    rec = run_graph_cell(args.graph_n, 3, mp,
+                                         setup_name=setup,
+                                         spectral_mode=mode)
+                    results.append(rec)
+                    extra = ""
+                    if rec["status"] == "ok":
+                        pay = rec["hlo_stats"]["collective_payload_bytes"]
+                        extra = f" coll_payload={pay:.3e}B"
+                    print(f"[{rec['status']:7s}] {rec['arch']} x "
+                          f"{rec['shape']} @ {rec['mesh']}{extra}",
+                          flush=True)
 
     suffix = f"_{args.tag}" if args.tag else ""
     path = os.path.join(args.out, f"dryrun{suffix}.json")

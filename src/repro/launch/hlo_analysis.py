@@ -337,6 +337,30 @@ def _collective_moved_bytes(ins: Instruction, by_name: dict) -> int:
     return ob
 
 
+def _collective_payload_bytes(ins: Instruction, by_name: dict) -> int:
+    """Per-device *shard payload* of a collective.
+
+    The bytes this device uniquely contributes to or keeps from the op: the
+    operand (its shard) for all-gather / all-to-all / collective-permute,
+    the result (its reduced shard) for reduce-scatter, and twice the operand
+    for all-reduce, which is unsharded at both ends.  This is the
+    bandwidth-optimal per-device lower bound; ``collective_bytes`` keeps the
+    ring-wire model above, which is up to group_size x larger for the
+    gather/scatter ops.  Sharded-spectrum paths (the pencil-mode fastsum
+    matvec) scale this quantity ~1/P while the psum path stays flat — it is
+    the column the dry-run pencil cells are asserted against.
+    """
+    rb = ins.result_bytes
+    ob = _operand_bytes(ins, by_name) or rb
+    if ins.opcode.startswith("all-gather"):
+        return ob
+    if ins.opcode.startswith("reduce-scatter"):
+        return rb
+    if ins.opcode.startswith("all-reduce"):
+        return 2 * ob
+    return ob
+
+
 _BF16_CONVERT_RE = re.compile(r"=\s*bf16\[")
 
 
@@ -414,6 +438,7 @@ class HloStats:
     largest_collectives: list
     while_trip_counts: list
     collective_bytes_raw: float = 0.0  # as seen in CPU-legalized HLO
+    collective_payload_bytes: float = 0.0  # per-device shard payload
 
     def to_json(self):
         d = dataclasses.asdict(self)
@@ -430,6 +455,7 @@ def analyze(hlo_text: str, *, pod_boundary: int = 256) -> HloStats:
     hbm = 0.0
     coll = 0.0
     coll_raw = 0.0
+    payload = 0.0
     dci = 0.0
     by_kind: dict[str, float] = {}
     n_coll = 0
@@ -456,8 +482,10 @@ def analyze(hlo_text: str, *, pod_boundary: int = 256) -> HloStats:
                         None)
             if kind is not None:
                 moved_raw = _collective_moved_bytes(ins, by_name) * mult
-                moved = (moved_raw // 2
-                         if _is_bf16_wire(ins, by_name, comps) else moved_raw)
+                bf16_wire = _is_bf16_wire(ins, by_name, comps)
+                moved = moved_raw // 2 if bf16_wire else moved_raw
+                pay = _collective_payload_bytes(ins, by_name) * mult
+                payload += pay // 2 if bf16_wire else pay
                 coll_raw += moved_raw
                 coll += moved
                 by_kind[kind] = by_kind.get(kind, 0.0) + moved
@@ -488,4 +516,5 @@ def analyze(hlo_text: str, *, pod_boundary: int = 256) -> HloStats:
         dot_flops_by_shape=dot_by_shape,
         largest_collectives=[(int(b), k, l) for b, k, l in largest[:10]],
         while_trip_counts=sorted(trips, reverse=True)[:8],
-        collective_bytes_raw=coll_raw)
+        collective_bytes_raw=coll_raw,
+        collective_payload_bytes=payload)

@@ -111,6 +111,43 @@ def test_krr_gaussian_and_inverse_multiquadric():
         assert float(jnp.max(jnp.abs(pred - pred_d))) < 1e-2
 
 
+def test_krr_predict_plans_once(monkeypatch):
+    """Serving path: the prediction operator (kernel Fourier coefficients,
+    Morton sort, spectral multiplier) is planned on the first predict and
+    reused for repeated predicts on the same target set — no rebuild on the
+    second call."""
+    from repro.graph import krr as krr_mod
+    from repro.graph import krr_prediction_operator
+
+    rng = np.random.default_rng(7)
+    xtr = jnp.asarray(rng.uniform(-3, 3, (300, 2)))
+    ytr = jnp.asarray(np.sign(rng.standard_normal(300)))
+    xte = jnp.asarray(rng.uniform(-3, 3, (100, 2)))
+    model = krr_fit(make_kernel("gaussian", sigma=1.0), xtr, ytr, 1e-2,
+                    FastsumParams(n_bandwidth=32, m=3, eps_b=0.0))
+
+    calls = []
+    real = krr_mod.make_fastsum
+    monkeypatch.setattr(krr_mod, "make_fastsum",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    p1 = krr_predict(model, xte)
+    assert len(calls) == 1
+    p2 = krr_predict(model, xte)  # same target set: cache hit, no rebuild
+    assert len(calls) == 1
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+    xte2 = jnp.asarray(rng.uniform(-3, 3, (50, 2)))
+    krr_predict(model, xte2)  # new target set: plans again
+    assert len(calls) == 2
+
+    # prebuilt-operator path bypasses the model cache entirely
+    op = krr_prediction_operator(model, xte)
+    n_after_build = len(calls)
+    p3 = krr_predict(model, xte, op=op)
+    assert len(calls) == n_after_build
+    np.testing.assert_allclose(np.asarray(p3), np.asarray(p1), atol=1e-12)
+
+
 def test_training_vector_clamps_small_classes():
     """A class smaller than n_samples_per_class contributes all its members
     and nothing else — the argsort over the 2.0 sentinel used to spill into

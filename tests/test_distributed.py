@@ -18,11 +18,15 @@ pytestmark = pytest.mark.multidevice
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600) -> str:
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600,
+                      x64: bool = False) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
     env["PYTHONPATH"] = REPO_SRC
-    env.pop("JAX_ENABLE_X64", None)
+    if x64:  # pencil/fused parity tests assert <= 1e-10: needs float64
+        env["JAX_ENABLE_X64"] = "1"
+    else:
+        env.pop("JAX_ENABLE_X64", None)
     proc = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, timeout=timeout, env=env)

@@ -51,6 +51,62 @@ def test_reduced_cell_lower_compile_roofline():
         f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"
 
 
+def test_graph_cell_pencil_payload_scales_inverse_p():
+    """The dry-run pencil cells' per-device collective payload scales ~1/P
+    while the psum cells' stays flat (and pencil wins at the larger mesh).
+
+    Lowers the shipped fused matvec body (not the retired seed
+    `_spectral_matvec_local`) on 8- and 32-chip meshes via
+    `run_graph_cell(..., spectral_mode=...)` — the same code path as the
+    512-chip `graph-fastsum-pencil-*` production cells.
+    """
+    code = """
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.launch.dryrun import run_graph_cell
+
+        devs = np.array(jax.devices())
+        mesh8 = Mesh(devs[:8].reshape(2, 4), ("data", "model"))
+        mesh32 = Mesh(devs[:32].reshape(8, 4), ("data", "model"))
+
+        def cell(mesh, mode):
+            rec = run_graph_cell(4096, 3, False, setup_name="setup2",
+                                 spectral_mode=mode, mesh=mesh)
+            assert rec["status"] == "ok", rec.get("error")
+            return rec
+
+        psum8, psum32 = cell(mesh8, "psum"), cell(mesh32, "psum")
+        pen8, pen32 = cell(mesh8, "pencil"), cell(mesh32, "pencil")
+        assert pen32["spectral_mode_effective"] == "pencil", pen32
+        pay = lambda r: r["hlo_stats"]["collective_payload_bytes"]
+        kinds = lambda r: r["hlo_stats"]["collective_by_kind"]
+
+        # the pencil path is reduce-scatter/all-to-all/all-gather, no psum
+        assert "all-reduce" in kinds(psum32), kinds(psum32)
+        assert "all-to-all" in kinds(pen32), kinds(pen32)
+        assert "reduce-scatter" in kinds(pen32), kinds(pen32)
+        assert "all-reduce" not in kinds(pen32), kinds(pen32)
+
+        # psum payload is flat in P; pencil payload drops ~1/P (4x here)
+        assert abs(pay(psum8) / pay(psum32) - 1.0) < 0.05, \\
+            (pay(psum8), pay(psum32))
+        ratio = pay(pen8) / pay(pen32)
+        assert 3.0 < ratio < 5.0, (pay(pen8), pay(pen32), ratio)
+        # past the crossover the sharded spectrum beats the flat psum
+        assert pay(pen32) < 0.6 * pay(psum32), (pay(pen32), pay(psum32))
+        print("pencil payload OK",
+              pay(psum8), pay(psum32), pay(pen8), pay(pen32))
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
+    env["PYTHONPATH"] = REPO_SRC
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"
+
+
 def test_decode_cell_serve_sharding():
     code = """
         import dataclasses, jax

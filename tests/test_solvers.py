@@ -43,6 +43,45 @@ def test_minres_spd_matches_cg():
                                rtol=1e-7, atol=1e-7)
 
 
+def _ill_conditioned_spd(n=150, decades=6, seed=1):
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    vals = np.logspace(-decades, 0, n)
+    return jnp.asarray(q @ np.diag(vals) @ q.T), \
+        jnp.asarray(rng.normal(size=n))
+
+
+def test_cg_reports_true_residual_on_ill_conditioned():
+    """The recurrence residual drifts below the attainable accuracy on an
+    ill-conditioned operator (cond ~1e6, tol below the final-accuracy
+    limit): the recurrence used to claim ~1e-10 convergence while
+    ||b - A x|| stagnates ~1e-9.  The exit recompute makes residual_norm
+    and converged describe the returned iterate."""
+    a, b = _ill_conditioned_spd()
+    tol = 1e-11
+    sol = cg(lambda x: a @ x, b, tol=tol, maxiter=20000)
+    true_res = float(jnp.linalg.norm(b - a @ sol.x))
+    assert abs(float(sol.residual_norm) - true_res) <= 1e-6 * true_res
+    tol_abs = tol * max(float(jnp.linalg.norm(b)), 1.0)
+    assert bool(sol.converged) == (true_res <= tol_abs)
+    # the drift is real: the solve stalled above the requested tolerance
+    assert true_res > tol_abs, (true_res, tol_abs)
+
+
+def test_minres_reports_true_residual_on_ill_conditioned():
+    """Same as the CG test; MINRES's |phi_bar| shrinks monotonically by
+    construction (a product of Givens sines), so it is guaranteed to drift
+    below the true residual — here by ~3 orders of magnitude."""
+    a, b = _ill_conditioned_spd()
+    tol = 1e-11
+    sol = minres(lambda x: a @ x, b, tol=tol, maxiter=20000)
+    true_res = float(jnp.linalg.norm(b - a @ sol.x))
+    assert abs(float(sol.residual_norm) - true_res) <= 1e-6 * true_res
+    tol_abs = tol * max(float(jnp.linalg.norm(b)), 1.0)
+    assert bool(sol.converged) == (true_res <= tol_abs)
+    assert true_res > tol_abs, (true_res, tol_abs)
+
+
 def test_minres_indefinite():
     rng = np.random.default_rng(6)
     n = 100
