@@ -36,10 +36,13 @@ def render(records: list, *, include_graph: bool = True) -> str:
     # "payload" = per-device shard payload of the collectives
     # (hlo_stats.collective_payload_bytes): flat in P for the psum spectral
     # mode, ~1/P for the pencil cells — the column that shows the drop.
-    lines.append("| arch | shape | mesh | kind | compute | memory | "
+    # "S" = multiplier-bank size of the graph-fastsum-bank cells (1 for the
+    # single-operator matvec): a bank cell's payload should sit near S times
+    # the matching S=1 cell's while its spread/forward-FFT work stays flat.
+    lines.append("| arch | shape | mesh | kind | S | compute | memory | "
                  "collective | payload | dominant | useful/HLO | HBM/dev "
                  "| DCI |")
-    lines.append("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
     for r in records:
         if r["status"] != "ok":
             continue
@@ -52,6 +55,7 @@ def render(records: list, *, include_graph: bool = True) -> str:
         payload = r.get("hlo_stats", {}).get("collective_payload_bytes", 0.0)
         lines.append(
             f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} "
+            f"| {r.get('bank', 1)} "
             f"| {fmt_s(roof['compute_s'])} | {fmt_s(roof['memory_s'])} "
             f"| {fmt_s(roof['collective_s'])} | {fmt_b(payload)} "
             f"| **{roof['dominant']}** "

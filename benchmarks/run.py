@@ -29,6 +29,8 @@ MODULES = [
      "Fig 9: kernel ridge regression decision boundaries"),
     ("scaling", "benchmarks.matvec_scaling",
      "Fig 3d core claim: O(n) NFFT matvec vs O(n^2) direct"),
+    ("sweep", "benchmarks.sweep_scaling",
+     "Operator-bank sigma sweep: lockstep bank CG vs sequential solves"),
     ("roofline", "benchmarks.roofline_report",
      "Roofline tables from the multi-pod dry-run"),
 ]

@@ -8,8 +8,10 @@ from repro.core.kernels import (  # noqa: F401
     INVERSE_MULTIQUADRIC, ALL_KERNELS,
 )
 from repro.core.fastsum import (  # noqa: F401
-    FastsumParams, FastsumOperator, NormalizedAdjacencyOperator,
-    make_fastsum, make_normalized_adjacency,
+    FastsumParams, FastsumOperator, FastsumOperatorBank,
+    NormalizedAdjacencyOperator,
+    make_fastsum, make_fastsum_bank, make_normalized_adjacency,
+    make_normalized_adjacency_mixture,
     SETUP_1, SETUP_2, SETUP_3,
     dense_weight_matrix, dense_normalized_adjacency, direct_matvec_tiled,
 )
@@ -21,14 +23,17 @@ from repro.core.nfft import (  # noqa: F401
 # window_spread/window_gather): re-exporting them here would shadow the
 # same-named, different-signature Pallas kernels in repro.kernels.ops.
 from repro.core.fastsum_exec import (  # noqa: F401
-    fused_matvec_tilde, fused_pipeline, fused_spectral_multiplier,
-    spectral_support,
+    fused_matvec_tilde, fused_matvec_tilde_bank, fused_pipeline,
+    fused_pipeline_bank, fused_spectral_multiplier, spectral_support,
+    stack_multipliers,
 )
 from repro.core.lanczos import (  # noqa: F401
     lanczos, block_lanczos, eigsh, eigsh_smallest_laplacian,
     BlockLanczosResult, EigshResult,
 )
-from repro.core.solvers import cg, minres, SolveResult  # noqa: F401
+from repro.core.solvers import (  # noqa: F401
+    cg, cg_bank, minres, minres_bank, SolveResult,
+)
 from repro.core.nystrom import (  # noqa: F401
     nystrom_traditional, nystrom_gaussian_nfft, NystromResult,
 )

@@ -200,14 +200,15 @@ class FastsumOperator:
         return self.matvec(ones)
 
 
-def make_fastsum(
-    kernel: Kernel,
-    points: Array,
-    params: FastsumParams,
-    *,
-    target_points: Optional[Array] = None,
-) -> FastsumOperator:
-    """Set up Algorithm 3.1 for ``points`` (n, d) in original coordinates."""
+def _scaled_plan(points: Array, params: FastsumParams,
+                 target_points: Optional[Array]):
+    """Kernel-independent plan-time setup, shared by single operators and
+    banks: node scaling into the admissible ball, the NFFT plan, and the
+    Morton-sorted window geometries.
+
+    Returns ``(scaled_src, scaled_tgt_or_None, rho, plan, src_win,
+    tgt_win)``.
+    """
     d = points.shape[1]
     eps_b = params.eps_b_eff
     if target_points is None:
@@ -218,32 +219,232 @@ def make_fastsum(
         scaled, rho, shift = scale_nodes(both, eps_b)
         scaled_src = scaled[: points.shape[0]]
         scaled_tgt = scaled[points.shape[0]:]
+    plan = params.nfft_plan(d)
+    src_win = build_window_geometry(plan, scaled_src)
+    tgt_win = src_win if target_points is None \
+        else build_window_geometry(plan, scaled_tgt)
+    return (scaled_src, None if target_points is None else scaled_tgt,
+            rho, plan, src_win, tgt_win)
 
+
+def _member_spectral(kernel: Kernel, rho, plan: NfftPlan,
+                     params: FastsumParams):
+    """Per-kernel spectral data: ``(b_hat, mult_half, out_scale, k0_corr)``.
+
+    The only kernel-dependent plan-time work — everything else
+    (:func:`_scaled_plan`) is shared across a bank's members.
+    """
     rescaled_kernel = kernel.rescaled(float(rho)) if not isinstance(rho, jax.core.Tracer) else kernel.rescaled(1.0)
     # NOTE: rho is a concrete value in every supported entry path (setup is
     # done eagerly, outside jit); the Tracer branch only exists to fail soft
-    # if someone jits make_fastsum — accuracy tests cover the eager path.
-    plan = params.nfft_plan(d)
-    b_hat = kernel_fourier_coefficients(rescaled_kernel, d, params.n_bandwidth,
-                                        params.p_eff, eps_b)
-    src_win = build_window_geometry(plan, scaled_src)
-    tgt_win = src_win if target_points is None else build_window_geometry(plan, scaled_tgt)
+    # if someone jits the operator builders — accuracy tests cover the
+    # eager path.
+    b_hat = kernel_fourier_coefficients(rescaled_kernel, plan.d,
+                                        params.n_bandwidth, params.p_eff,
+                                        params.eps_b_eff)
     mult_half = fastsum_exec.fused_spectral_multiplier(plan, b_hat)
-
     exponent = kernel.output_scale_exponent
-    out_scale = rho ** exponent if exponent != 0 else jnp.ones((), scaled.dtype)
-    k0 = kernel.at_zero()  # K(0) is scale-invariant for all four kernels w/
-    # parameter rescaling *except* the multiquadrics, where K(0)=c resp. 1/c;
+    out_scale = rho ** exponent if exponent != 0 else 1.0
+    # K(0) is scale-invariant for all four kernels w/ parameter rescaling
+    # *except* the multiquadrics, where K(0)=c resp. 1/c;
     # out_scale * K_rescaled(0) == K(0) holds for all four — use that:
     k0_corr = out_scale * rescaled_kernel.at_zero()
+    return b_hat, mult_half, out_scale, k0_corr
+
+
+def make_fastsum(
+    kernel: Kernel,
+    points: Array,
+    params: FastsumParams,
+    *,
+    target_points: Optional[Array] = None,
+) -> FastsumOperator:
+    """Set up Algorithm 3.1 for ``points`` (n, d) in original coordinates."""
+    scaled_src, scaled_tgt, rho, plan, src_win, tgt_win = _scaled_plan(
+        points, params, target_points)
+    b_hat, mult_half, out_scale, k0_corr = _member_spectral(
+        kernel, rho, plan, params)
+    rdt = jnp.real(b_hat).dtype
     return FastsumOperator(
         plan=plan,
         b_hat=b_hat,
         scaled_src=scaled_src,
-        scaled_tgt=None if target_points is None else scaled_tgt,
-        output_scale=jnp.asarray(out_scale, dtype=jnp.real(b_hat).dtype),
-        kernel_at_zero=jnp.asarray(k0_corr, dtype=jnp.real(b_hat).dtype),
+        scaled_tgt=scaled_tgt,
+        output_scale=jnp.asarray(out_scale, dtype=rdt),
+        kernel_at_zero=jnp.asarray(k0_corr, dtype=rdt),
         multiplier_half=mult_half,
+        src_window=src_win,
+        tgt_window=tgt_win,
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FastsumOperatorBank:
+    """A bank of S Algorithm 3.1 operators sharing nodes, plan, and geometry.
+
+    The members differ only in their kernel (and hence spectral multiplier);
+    the plan and Morton-sorted window geometry depend only on the points, so
+    a bank matvec shares one spread and one forward rfftn across all S
+    members (:func:`repro.core.fastsum_exec.fused_pipeline_bank`).  This is
+    the execution shape of a hyperparameter sweep (one operator per sigma)
+    and of multilayer graphs (one operator per layer kernel).
+
+    Per-member output scales are folded into ``multiplier_bank`` and
+    ``b_hat_bank`` at build time (the pipeline is linear), so ``matvec``
+    needs no per-member post-scaling and a fixed-weight mixture collapses to
+    a plain weighted sum of multipliers (:meth:`mixture`).
+    """
+
+    plan: NfftPlan  # static
+    b_hat_bank: Array  # (S,) + (N,)*d, output scale folded in
+    scaled_src: Array
+    scaled_tgt: Array  # or None when targets == sources
+    kernel_at_zero: Array  # (S,) corrected K(0) per member
+    multiplier_bank: Array  # (S,) + half-spectrum, output scale folded in
+    src_window: WindowGeometry
+    tgt_window: WindowGeometry
+
+    def tree_flatten(self):
+        children = (self.b_hat_bank, self.scaled_src, self.scaled_tgt,
+                    self.kernel_at_zero, self.multiplier_bank,
+                    self.src_window, self.tgt_window)
+        return children, (self.plan,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], *children)
+
+    @property
+    def size(self) -> int:
+        return self.multiplier_bank.shape[0]
+
+    @property
+    def n_source(self) -> int:
+        return self.scaled_src.shape[0]
+
+    def member(self, s: int) -> FastsumOperator:
+        """Single-member view (a plain :class:`FastsumOperator`).
+
+        Shares the bank's geometry arrays; the member's output scale is
+        already folded into its multiplier, so ``output_scale`` is 1.
+        """
+        one = jnp.ones((), jnp.real(self.b_hat_bank).dtype)
+        return FastsumOperator(
+            plan=self.plan, b_hat=self.b_hat_bank[s],
+            scaled_src=self.scaled_src, scaled_tgt=self.scaled_tgt,
+            output_scale=one, kernel_at_zero=self.kernel_at_zero[s],
+            multiplier_half=self.multiplier_bank[s],
+            src_window=self.src_window, tgt_window=self.tgt_window)
+
+    def mixture(self, weights) -> FastsumOperator:
+        """Collapse a fixed-weight mixture ``sum_s w_s W̃_s`` to ONE operator.
+
+        The combined multiplier is the weighted sum of the member
+        multipliers, so the whole mixture — e.g. an aggregated multilayer
+        Laplacian's weighted sum of per-layer kernels — costs exactly one
+        fused matvec per application, not S.
+        """
+        w = jnp.asarray(weights, jnp.real(self.b_hat_bank).dtype)
+        if w.shape != (self.size,):
+            raise ValueError(f"weights must have shape ({self.size},), "
+                             f"got {w.shape}")
+        one = jnp.ones((), w.dtype)
+        return FastsumOperator(
+            plan=self.plan,
+            b_hat=jnp.tensordot(w.astype(self.b_hat_bank.dtype),
+                                self.b_hat_bank, axes=1),
+            scaled_src=self.scaled_src, scaled_tgt=self.scaled_tgt,
+            output_scale=one,
+            kernel_at_zero=jnp.dot(w, self.kernel_at_zero),
+            multiplier_half=jnp.tensordot(
+                w.astype(self.multiplier_bank.dtype), self.multiplier_bank,
+                axes=1),
+            src_window=self.src_window, tgt_window=self.tgt_window)
+
+    def matvec_tilde(self, x: Array, *, backend: str | None = None) -> Array:
+        """Bank kernel sums (diagonal K(0) included).
+
+        ``x`` (n,) / (n, C): broadcast — every member applied to the same
+        right-hand sides, returning (S, n) / (S, n, C).  ``x`` (S, n, C):
+        lockstep — member ``s`` applied to ``x[s]`` (the bank Krylov shape).
+        Either way: one spread, one forward rfftn, one batched irfftn, one
+        gather.
+        """
+        return fastsum_exec.fused_matvec_tilde_bank(
+            self.plan, self.multiplier_bank, self.src_window,
+            self.tgt_window, x, backend=backend)
+
+    def matvec_tilde_columns(self, u: Array, *,
+                             backend: str | None = None) -> Array:
+        """Lockstep bank matvec in flat column layout: (n, S*C) -> (n, S*C).
+
+        Column ``s*C + j`` belongs to member ``s`` (bank-major) — the
+        layout the per-column solvers iterate on.  Identical math to the
+        (S, n, C) lockstep flavor with zero bank-axis transposes per call;
+        :func:`repro.graph.krr.krr_fit_sweep` runs its whole CG on this.
+        """
+        return fastsum_exec.fused_matvec_tilde_bank_columns(
+            self.plan, self.multiplier_bank, self.src_window,
+            self.tgt_window, u, backend=backend)
+
+    def _require_square(self, name: str) -> None:
+        if self.scaled_tgt is not None:
+            raise ValueError(
+                f"FastsumOperatorBank.{name} subtracts the K(0) diagonal, "
+                "which is only defined when source and target nodes "
+                "coincide; this bank was built with target_points — use "
+                "matvec_tilde for rectangular kernel sums.")
+
+    def matvec(self, x: Array, *, backend: str | None = None) -> Array:
+        """y[s] = (W̃_s - K_s(0) I) x  (or x[s] in lockstep flavor)."""
+        self._require_square("matvec")
+        out = self.matvec_tilde(x, backend=backend)  # (S, n[, C])
+        # k0 aligned with out's bank axis broadcasts against both the
+        # broadcast (x: (n[, C])) and lockstep (x: (S, n, C)) flavors
+        k0 = self.kernel_at_zero.reshape((self.size,) + (1,) * (out.ndim - 1))
+        return out - k0 * x
+
+
+def make_fastsum_bank(
+    kernels,
+    points: Array,
+    params: FastsumParams,
+    *,
+    target_points: Optional[Array] = None,
+) -> FastsumOperatorBank:
+    """Plan a bank of Algorithm 3.1 operators over shared ``points``.
+
+    ``kernels`` is a sequence of :class:`~repro.core.kernels.Kernel` — one
+    member per kernel/parameter combination (a sigma sweep, the per-layer
+    kernels of a multilayer graph, ...).  Node scaling, the NFFT plan, and
+    the window geometries are computed once; only the O(N^d) spectral
+    multipliers are per-member.
+    """
+    kernels = tuple(kernels)
+    if not kernels:
+        raise ValueError("make_fastsum_bank needs at least one kernel")
+    scaled_src, scaled_tgt, rho, plan, src_win, tgt_win = _scaled_plan(
+        points, params, target_points)
+
+    b_hats, mults, k0s = [], [], []
+    for kernel in kernels:
+        b_hat, mult_half, out_scale, k0_corr = _member_spectral(
+            kernel, rho, plan, params)
+        # fold the rho**exponent output correction into the (linear)
+        # spectral data so bank members need no per-member post-scale
+        b_hats.append(b_hat * out_scale)
+        mults.append(mult_half * out_scale)
+        k0s.append(k0_corr)
+    b_hat_bank = jnp.stack(b_hats)
+    return FastsumOperatorBank(
+        plan=plan,
+        b_hat_bank=b_hat_bank,
+        scaled_src=scaled_src,
+        scaled_tgt=scaled_tgt,
+        kernel_at_zero=jnp.asarray(np.asarray(k0s),
+                                   dtype=jnp.real(b_hat_bank).dtype),
+        multiplier_bank=jnp.stack(mults),
         src_window=src_win,
         tgt_window=tgt_win,
     )
@@ -286,10 +487,7 @@ class NormalizedAdjacencyOperator:
         return scale * self.fastsum.matvec(x)
 
 
-def make_normalized_adjacency(
-    kernel: Kernel, points: Array, params: FastsumParams
-) -> NormalizedAdjacencyOperator:
-    fs = make_fastsum(kernel, points, params)
+def _normalized_adjacency_from(fs: FastsumOperator) -> NormalizedAdjacencyOperator:
     deg = fs.degrees()
     # Lemma 3.1 requires eps < eta, i.e. the approximation error below the
     # smallest degree; negative approximate degrees would make D^{-1/2}
@@ -298,6 +496,28 @@ def make_normalized_adjacency(
     return NormalizedAdjacencyOperator(
         fastsum=fs, inv_sqrt_deg=1.0 / jnp.sqrt(deg), degrees=deg
     )
+
+
+def make_normalized_adjacency(
+    kernel: Kernel, points: Array, params: FastsumParams
+) -> NormalizedAdjacencyOperator:
+    return _normalized_adjacency_from(make_fastsum(kernel, points, params))
+
+
+def make_normalized_adjacency_mixture(
+    kernels, weights, points: Array, params: FastsumParams
+) -> NormalizedAdjacencyOperator:
+    """Algorithm 3.2 for an aggregated multilayer weight matrix.
+
+    The multilayer extension (Bergermann–Stoll–Volkmer 2020) aggregates the
+    per-layer kernels into ``W = sum_l w_l (W̃_l - K_l(0) I)`` before
+    normalizing.  The mixture collapses to a *single* summed spectral
+    multiplier (:meth:`FastsumOperatorBank.mixture`), so every matvec of the
+    multilayer adjacency/Laplacian costs exactly one fused pipeline — the
+    same price as a single-layer graph.
+    """
+    bank = make_fastsum_bank(kernels, points, params)
+    return _normalized_adjacency_from(bank.mixture(weights))
 
 
 # ---------------------------------------------------------------------------

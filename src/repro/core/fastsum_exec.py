@@ -190,9 +190,15 @@ def _xla_spread(plan: NfftPlan, geometry: WindowGeometry, xs: Array) -> Array:
     return jax.lax.fori_loop(0, num_tiles, body, gpad)
 
 
-def _xla_gather(plan: NfftPlan, geometry: WindowGeometry,
-                gpad: Array) -> Array:
-    """Streaming tiled gather (transpose of :func:`_xla_spread`), row order."""
+def _xla_gather_windowed(plan: NfftPlan, geometry: WindowGeometry,
+                         gpad: Array) -> Array:
+    """Streaming tiled whole-window gather (transpose of :func:`_xla_spread`).
+
+    The fast single-channel body: one `lax.gather` of (taps,)^d + (C,)
+    window slices per node tile.  XLA CPU expands gathers to per-element
+    loops, and this slice shape hits the cheap expansion only for C = 1 —
+    multi-channel inputs route through :func:`_xla_gather` instead.
+    """
     d, taps = plan.d, plan.taps
     c = gpad.shape[-1]
     n = geometry.base.shape[0]
@@ -220,6 +226,85 @@ def _xla_gather(plan: NfftPlan, geometry: WindowGeometry,
     if num_tiles == 1:
         return body(0, acc)[:n]
     return jax.lax.fori_loop(0, num_tiles, body, acc)[:n]
+
+
+# Multi-channel gather strategy thresholds, tuned empirically on CPU (see
+# the PR 5 sweep benchmark): XLA expands every gather into a per-element
+# loop, and the windowed (taps,)^d + (C,) slice expansion is ~3-5x slower
+# per element for C >= 2 than for C = 1.  A per-channel lax.map of the fast
+# C = 1 body restores the good constant (linear in C); for small d and
+# enough channels, a flat-index row take is better still — its ~constant
+# per-index overhead amortizes over the C contiguous channel values.
+_XLA_GATHER_TAKE_MIN_C = 6
+_XLA_GATHER_TAKE_MAX_D = 2
+_XLA_TAKE_TILE_ELEMS = 1 << 18
+
+
+def _xla_gather_take(plan: NfftPlan, geometry: WindowGeometry,
+                     gpad: Array) -> Array:
+    """Flat-index tiled gather: one row take per (node, window element).
+
+    Gathers rows of the channel-flattened grid by precomputed flat indices
+    (static per-plan cube offsets + per-node flat corners) and contracts the
+    weight cube per tile.  Per-index cost is ~constant in C, so this wins
+    for many channels when taps^d is small (d <= 2).
+    """
+    d, taps = plan.d, plan.taps
+    pad_n = padded_grid_size(plan)
+    c = gpad.shape[-1]
+    n = geometry.base.shape[0]
+    gflat = gpad.reshape(-1, c)
+    # static flat offsets of the (taps,)^d window cube (numpy: jit-literal)
+    offs = np.arange(taps)
+    cube = offs
+    for _ in range(d - 1):
+        cube = cube[..., None] * pad_n + offs
+    cube_off = jnp.asarray(cube.reshape(-1), jnp.int32)
+    fb = geometry.base[:, 0]
+    for t in range(1, d):
+        fb = fb * pad_n + geometry.base[:, t]
+    tile = max(64, min(n, _XLA_TAKE_TILE_ELEMS // taps ** d))
+    pad = (-n) % tile
+    fbp = jnp.pad(fb, (0, pad))
+    w = jnp.pad(geometry.weights, ((0, pad), (0, 0), (0, 0)))
+
+    def body(k, acc):
+        fbt = jax.lax.dynamic_slice_in_dim(fbp, k * tile, tile)
+        wt = jax.lax.dynamic_slice_in_dim(w, k * tile, tile, axis=0)
+        idx = (fbt[:, None] + cube_off[None, :]).reshape(-1)
+        vals = jnp.take(gflat, idx, axis=0,
+                        unique_indices=False).reshape(tile, -1, c)
+        wcube = _tile_weight_cube(wt, d).reshape(tile, -1)
+        out = jnp.einsum("ntc,nt->nc", vals, wcube)
+        return jax.lax.dynamic_update_slice_in_dim(acc, out, k * tile, axis=0)
+
+    acc = jnp.zeros((n + pad, c), dtype=gpad.dtype)
+    num_tiles = (n + pad) // tile
+    if num_tiles == 1:
+        return body(0, acc)[:n]
+    return jax.lax.fori_loop(0, num_tiles, body, acc)[:n]
+
+
+def _xla_gather(plan: NfftPlan, geometry: WindowGeometry,
+                gpad: Array) -> Array:
+    """Streaming tiled gather, row order — multi-channel aware.
+
+    Dispatches between three equivalent bodies on the (static) channel
+    count: the whole-window slice gather for C = 1 (XLA's cheap expansion),
+    a flat-index row take for many channels at small d, and a per-channel
+    ``lax.map`` of the C = 1 body otherwise.  The multi-channel paths keep
+    the bank matvec's inverse half from dominating a sweep: the batched
+    windowed gather costs ~3-5x more *per element* as soon as C >= 2.
+    """
+    c = gpad.shape[-1]
+    if c == 1:
+        return _xla_gather_windowed(plan, geometry, gpad)
+    if plan.d <= _XLA_GATHER_TAKE_MAX_D and c >= _XLA_GATHER_TAKE_MIN_C:
+        return _xla_gather_take(plan, geometry, gpad)
+    gm = jnp.moveaxis(gpad, -1, 0)[..., None]  # (C,) + grid + (1,)
+    out = jax.lax.map(
+        lambda g1: _xla_gather_windowed(plan, geometry, g1)[..., 0], gm)
+    return jnp.moveaxis(out, 0, 1)
 
 
 def window_spread(plan: NfftPlan, geometry: WindowGeometry, x: Array, *,
@@ -266,7 +351,12 @@ def window_gather(plan: NfftPlan, geometry: WindowGeometry, g: Array, *,
             interpret=_pallas_interpret())
     else:
         out = _xla_gather(plan, geometry, gpad)
-    return jnp.zeros_like(out).at[geometry.perm].set(out)
+    # restore node order via the inverse permutation as a row *take*: the
+    # equivalent multi-channel row scatter costs ~10x more on XLA CPU, and
+    # the (n,) int scatter building the inverse is single-channel (cheap)
+    inv = jnp.zeros_like(geometry.perm).at[geometry.perm].set(
+        jnp.arange(out.shape[0], dtype=geometry.perm.dtype))
+    return out[inv]
 
 
 def fused_pipeline(plan: NfftPlan, multiplier_half: Array,
@@ -316,3 +406,147 @@ def fused_matvec_tilde(plan: NfftPlan, multiplier_half: Array,
                        x: Array, backend: str | None = None) -> Array:
     """y = W̃ x via the fused pipeline; x: (n,) or (n, C) real."""
     return fused_pipeline(plan, multiplier_half, src, tgt, x, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Multiplier banks: amortize spread + forward FFT across S operators.
+# ---------------------------------------------------------------------------
+
+def stack_multipliers(plan: NfftPlan, b_hats) -> Array:
+    """Stack per-member fused multipliers into an ``(S,) + half-spectrum`` bank.
+
+    All members share the plan (and hence the window geometry): only the
+    kernel Fourier coefficients differ, so a whole bank of operators can ride
+    on one spread and one forward transform (:func:`fused_pipeline_bank`).
+    """
+    return jnp.stack([fused_spectral_multiplier(plan, bh) for bh in b_hats])
+
+
+def fused_pipeline_bank(plan: NfftPlan, multiplier_bank: Array,
+                        src: WindowGeometry, tgt: WindowGeometry, x: Array,
+                        spectral_reduce=None, backend: str | None = None,
+                        spectral_op=None) -> Array:
+    """Bank matvec: one spread + one forward rfftn shared by S multipliers.
+
+    ``multiplier_bank`` has shape ``(S,) + (M,)*(d-1) + (M//2+1,)`` (see
+    :func:`stack_multipliers`).  Two input flavors, distinguished by rank:
+
+    * **broadcast** — ``x`` of shape (n,) or (n, C): every member is applied
+      to the same right-hand sides.  The spread and forward rfftn run once
+      with C channels; the S cheap diagonal multiplies, one *batched* irfftn
+      over S*C channels, and one gather with S*C channels produce
+      ``(S, n)`` / ``(S, n, C)``.  An S-point multiplier sweep costs ~one
+      matvec plus S spectral multiplies instead of S full pipelines.
+
+    * **lockstep** — ``x`` of shape (S, n, C): member ``s`` is applied to
+      ``x[s]`` (the shape a bank Krylov solver iterates on).  The S*C system
+      columns ride the channel axis end to end — still exactly one spread,
+      one forward rfftn, one irfftn, one gather.
+
+    ``spectral_reduce`` / ``spectral_op`` mirror :func:`fused_pipeline`:
+    the reduce hits the support block of the multiplied half-spectrum with
+    the bank stacked into the channel axis (the distributed psum mode's one
+    collective); ``spectral_op``, when given, replaces the whole rfftn ->
+    multiply -> irfftn mid-section and must map the spread grid to an
+    inverse-transformed grid with ``S*C`` trailing channels (it owns the
+    bank multiply — the pencil mode's per-device multiplier slabs).
+    """
+    nb = multiplier_bank.shape[0]
+    lockstep = x.ndim == 3
+    if lockstep:
+        if x.shape[0] != nb:
+            raise ValueError(
+                f"lockstep x has bank axis {x.shape[0]}, bank has {nb}")
+        c = x.shape[-1]
+        xb = jnp.moveaxis(x, 0, 1).reshape(x.shape[1], nb * c)
+    else:
+        batched = x.ndim == 2
+        xb = x if batched else x[:, None]
+        c = xb.shape[-1]
+    out = _bank_columns_core(plan, multiplier_bank, src, tgt, xb,
+                             broadcast=not lockstep,
+                             spectral_reduce=spectral_reduce,
+                             backend=backend, spectral_op=spectral_op)
+    out = jnp.moveaxis(out.reshape(out.shape[0], nb, c), 0, 1)  # (S, n, C)
+    if lockstep:
+        return out
+    return out if batched else out[..., 0]
+
+
+def _bank_columns_core(plan: NfftPlan, multiplier_bank: Array,
+                       src: WindowGeometry, tgt: WindowGeometry, xb: Array,
+                       *, broadcast: bool, spectral_reduce=None,
+                       backend: str | None = None, spectral_op=None) -> Array:
+    """Shared bank pipeline body in flat column layout.
+
+    ``xb`` is (n, K): the spread/FFT channel lanes.  ``broadcast=True``
+    treats all K columns as shared right-hand sides and expands them
+    against every member (output K*S columns, S-major); ``broadcast=False``
+    treats K = S*C bank-major lockstep columns (column ``s*C + j`` belongs
+    to member ``s``) and multiplies member-wise (output K columns).
+    """
+    d = plan.d
+    nb = multiplier_bank.shape[0]
+    g = window_spread(plan, src, xb, backend=backend)
+    if spectral_op is not None:
+        y = spectral_op(g)  # (M,)*d + (S*C,): the op owns the bank multiply
+    else:
+        g_hat = jnp.fft.rfftn(g, axes=tuple(range(d)))
+        mb = jnp.moveaxis(multiplier_bank, 0, -1)  # spectrum + (S,)
+        if broadcast:
+            gh = g_hat[..., None, :]  # spectrum + (1, C): broadcast over S
+        else:
+            c = g_hat.shape[-1] // nb
+            gh = g_hat.reshape(g_hat.shape[:d] + (nb, c))
+        prod = mb[..., :, None].astype(g_hat.dtype) * gh  # spectrum + (S, C)
+        flat = prod.reshape(prod.shape[:d] + (-1,))
+        if spectral_reduce is not None:
+            sup = jnp.meshgrid(*spectral_support(plan), indexing="ij")
+            block = spectral_reduce(flat[tuple(sup)])
+            flat = jnp.zeros_like(flat).at[tuple(sup)].set(block)
+        y = jnp.fft.irfftn(flat, s=(plan.grid_size,) * d,
+                           axes=tuple(range(d)))
+    return window_gather(plan, tgt, y.astype(xb.dtype), backend=backend)
+
+
+def fused_pipeline_bank_columns(plan: NfftPlan, multiplier_bank: Array,
+                                src: WindowGeometry, tgt: WindowGeometry,
+                                u: Array, spectral_reduce=None,
+                                backend: str | None = None,
+                                spectral_op=None) -> Array:
+    """Lockstep bank matvec in flat column-major layout: (n, S*C) -> same.
+
+    Column ``s*C + j`` belongs to member ``s`` — exactly the layout the
+    lockstep solvers iterate on, so a bank Krylov iteration runs with ZERO
+    bank-axis transposes (the (S, n, C) flavor of
+    :func:`fused_pipeline_bank` costs four (n, S*C)-sized copies per call
+    just moving the bank axis in and out).
+    """
+    nb = multiplier_bank.shape[0]
+    if u.ndim != 2 or u.shape[-1] % nb:
+        raise ValueError(
+            f"columns input must be (n, S*C) with S={nb}, got {u.shape}")
+    return _bank_columns_core(plan, multiplier_bank, src, tgt, u,
+                              broadcast=False,
+                              spectral_reduce=spectral_reduce,
+                              backend=backend, spectral_op=spectral_op)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "backend"))
+def fused_matvec_tilde_bank(plan: NfftPlan, multiplier_bank: Array,
+                            src: WindowGeometry, tgt: WindowGeometry,
+                            x: Array, backend: str | None = None) -> Array:
+    """y[s] = W̃_s x (broadcast) or W̃_s x[s] (lockstep); see
+    :func:`fused_pipeline_bank`."""
+    return fused_pipeline_bank(plan, multiplier_bank, src, tgt, x,
+                               backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "backend"))
+def fused_matvec_tilde_bank_columns(plan: NfftPlan, multiplier_bank: Array,
+                                    src: WindowGeometry,
+                                    tgt: WindowGeometry, u: Array,
+                                    backend: str | None = None) -> Array:
+    """Jitted :func:`fused_pipeline_bank_columns` (the solver hot loop)."""
+    return fused_pipeline_bank_columns(plan, multiplier_bank, src, tgt, u,
+                                       backend=backend)

@@ -40,13 +40,16 @@ from repro.core.kernels import Kernel
 def kernel_radial_derivatives(kernel: Kernel, r0: float, order: int) -> np.ndarray:
     """Values ``[K(r0), K'(r0), ..., K^(order-1)(r0)]`` via nested jax.grad.
 
-    Evaluated in float64 at setup time (tiny cost, executed once per plan).
+    Evaluated in float64 at setup time, *eagerly*: jitting the grad chain
+    here compiled ``order`` fresh scalar XLA programs per kernel instance —
+    ~150 ms of pure compile per member of a sigma sweep, for a computation
+    that runs in microseconds op-by-op.
     """
     derivs = []
     f = lambda r: kernel.phi(r)
     g = f
     for _ in range(order):
-        derivs.append(float(jax.jit(g)(jnp.float64(r0))))
+        derivs.append(float(g(jnp.float64(r0))))
         g = jax.grad(g)
     return np.asarray(derivs, dtype=np.float64)
 

@@ -7,6 +7,26 @@ matrix-free and jit-compatible (``lax.while_loop``).  Used for
     (K + beta I) alpha = f      (kernel ridge regression, Section 6.3)
 
 with the matvec supplied by Algorithm 3.1/3.2 operators.
+
+Batched right-hand sides ``b`` of shape (n, C) run C *independent*
+recurrences in lockstep: per-column step sizes, per-column tolerances
+(``tol * max(||b_c||, 1)``), and per-column convergence masks that freeze a
+column's iterate once it converges while the others continue — one easy
+column can no longer mask (or distort, through a shared global step size)
+the convergence of the others.  The matvec is still invoked once per
+iteration on the whole (n, C) block, so the fused fastsum engine amortizes
+its spread/FFT/gather over all active systems.
+
+``cg_bank`` / ``minres_bank`` lift the same lockstep machinery over a
+*bank* axis: ``b`` of shape (S, n) or (S, n, C) with a bank matvec
+``(S, n, C) -> (S, n, C)`` (e.g. ``FastsumOperatorBank.matvec``'s lockstep
+flavor) solves all S·C systems with ONE bank matvec per iteration — the
+execution shape of a hyperparameter sweep.
+
+All solvers recompute the true residual ``||b - A x||`` (per column) at
+exit: the recurrence residual drifts on ill-conditioned operators, so the
+reported ``residual_norm`` / ``converged`` always describe the returned
+iterate.
 """
 
 from __future__ import annotations
@@ -27,80 +47,144 @@ class SolveResult(NamedTuple):
     converged: Array
 
 
+def _col_norms(v: Array) -> Array:
+    """Per-column 2-norms of (n, C) -> (C,); complex-safe (|v|^2)."""
+    return jnp.sqrt(jnp.sum(jnp.real(v * jnp.conj(v)), axis=0))
+
+
+def _col_dot(u: Array, v: Array) -> Array:
+    """Per-column <u, v> (conjugating, real part) of (n, C) -> (C,).
+
+    The column-wise analogue of ``jnp.vdot(u, v).real`` — keeps the
+    complex-HPD case working; for real dtypes XLA folds conj/real away.
+    """
+    return jnp.real(jnp.sum(jnp.conj(u) * v, axis=0))
+
+
+def _as_columns(matvec: Matvec, b: Array, x0: Array | None,
+                preconditioner: Matvec | None):
+    """Normalize a (n,)- or (n, C)-shaped solve to the (n, C) layout."""
+    batched = b.ndim == 2
+    if batched:
+        return matvec, b, x0, preconditioner, True
+    mv = lambda u: matvec(u[:, 0])[:, None]
+    pc = None if preconditioner is None \
+        else (lambda u: preconditioner(u[:, 0])[:, None])
+    return mv, b[:, None], None if x0 is None else x0[:, None], pc, False
+
+
+def _squeeze_result(res: SolveResult, batched: bool) -> SolveResult:
+    if batched:
+        return res
+    return SolveResult(x=res.x[:, 0], num_iters=res.num_iters[0],
+                       residual_norm=res.residual_norm[0],
+                       converged=res.converged[0])
+
+
 def cg(matvec: Matvec, b: Array, *, x0: Array | None = None,
        tol: float = 1e-8, maxiter: int = 1000,
        preconditioner: Matvec | None = None) -> SolveResult:
-    """Preconditioned conjugate gradients for SPD operators."""
-    x = jnp.zeros_like(b) if x0 is None else x0
-    r = b - matvec(x)
+    """Preconditioned conjugate gradients for SPD operators.
+
+    ``b`` (n,): scalar recurrence, scalar result fields.  ``b`` (n, C):
+    per-column recurrences in lockstep (see module docstring); ``x``
+    (n, C) and ``num_iters`` / ``residual_norm`` / ``converged`` (C,).
+    """
+    matvec, b, x0, preconditioner, batched = _as_columns(
+        matvec, b, x0, preconditioner)
+    if x0 is None:
+        # r0 = b - A·0 = b: skipping the matvec drops one of three copies
+        # of the operator graph from the trace (faster compile, same math)
+        x, r = jnp.zeros_like(b), b
+    else:
+        x, r = x0, b - matvec(x0)
     z = preconditioner(r) if preconditioner is not None else r
     p = z
-    rz = jnp.vdot(r, z).real
-    b_norm = jnp.linalg.norm(b)
-    tol_abs = tol * jnp.maximum(b_norm, 1.0)
+    rz = _col_dot(r, z)  # (C,)
+    tol_abs = tol * jnp.maximum(_col_norms(b), 1.0)  # (C,)
+    iters0 = jnp.zeros(b.shape[1:], jnp.int32)
 
     def cond(state):
-        x, r, z, p, rz, i = state
-        return jnp.logical_and(i < maxiter, jnp.linalg.norm(r) > tol_abs)
+        x, r, z, p, rz, iters, i = state
+        return jnp.logical_and(i < maxiter,
+                               jnp.any(_col_norms(r) > tol_abs))
 
     def body(state):
-        x, r, z, p, rz, i = state
+        x, r, z, p, rz, iters, i = state
+        active = _col_norms(r) > tol_abs  # (C,)
         ap = matvec(p)
-        denom = jnp.vdot(p, ap).real
+        denom = _col_dot(p, ap)
         alpha = rz / jnp.where(denom != 0, denom, 1.0)
+        # freeze converged columns: zero step keeps x, r (and hence the
+        # active mask) fixed while the remaining columns keep iterating
+        alpha = jnp.where(active, alpha, 0.0)
         x = x + alpha * p
         r = r - alpha * ap
         z_new = preconditioner(r) if preconditioner is not None else r
-        rz_new = jnp.vdot(r, z_new).real
-        beta = rz_new / jnp.where(rz != 0, rz, 1.0)
+        rz_new = _col_dot(r, z_new)
+        beta = jnp.where(active, rz_new / jnp.where(rz != 0, rz, 1.0), 0.0)
         p = z_new + beta * p
-        return x, r, z_new, p, rz_new, i + 1
+        return x, r, z_new, p, rz_new, iters + active, i + 1
 
-    x, r, z, p, rz, iters = jax.lax.while_loop(
-        cond, body, (x, r, z, p, rz, jnp.zeros((), jnp.int32)))
+    x, r, z, p, rz, iters, _ = jax.lax.while_loop(
+        cond, body, (x, r, z, p, rz, iters0, jnp.zeros((), jnp.int32)))
     # The recurrence residual r drifts from b - A x on ill-conditioned
     # operators (finite-precision rounding breaks the exact update
     # invariant), so the loop can report convergence the iterate doesn't
     # have.  One extra matvec recomputes the true residual at exit so
     # residual_norm / converged reflect the returned x.
-    res = jnp.linalg.norm(b - matvec(x))
-    return SolveResult(x=x, num_iters=iters, residual_norm=res,
-                       converged=res <= tol_abs)
+    res = _col_norms(b - matvec(x))
+    return _squeeze_result(
+        SolveResult(x=x, num_iters=iters, residual_norm=res,
+                    converged=res <= tol_abs), batched)
 
 
 def minres(matvec: Matvec, b: Array, *, x0: Array | None = None,
            tol: float = 1e-8, maxiter: int = 1000) -> SolveResult:
-    """MINRES for symmetric (possibly indefinite) operators."""
-    x = jnp.zeros_like(b) if x0 is None else x0
-    r = b - matvec(x)
-    beta1 = jnp.linalg.norm(r)
-    b_norm = jnp.maximum(jnp.linalg.norm(b), 1.0)
-    tol_abs = tol * b_norm
+    """MINRES for symmetric (possibly indefinite) operators.
+
+    Batched ``b`` (n, C) runs per-column Lanczos + Givens recurrences in
+    lockstep (all scalar recurrence state becomes (C,)-shaped); converged
+    columns stop updating their iterate while the rest continue.
+    """
+    matvec, b, x0, _, batched = _as_columns(matvec, b, x0, None)
+    if x0 is None:
+        x, r = jnp.zeros_like(b), b  # r0 = b - A·0 (matvec elided)
+    else:
+        x, r = x0, b - matvec(x0)
+    beta1 = _col_norms(r)  # (C,)
+    tol_abs = tol * jnp.maximum(_col_norms(b), 1.0)
     dtype = b.dtype
     eps = jnp.finfo(dtype).tiny
+    cshape = beta1.shape
 
-    # Lanczos + Givens QR recurrences (standard MINRES state machine)
+    # Lanczos + Givens QR recurrences (standard MINRES state machine),
+    # one independent recurrence per column
     v = r / jnp.maximum(beta1, eps)
     v_prev = jnp.zeros_like(b)
     w = jnp.zeros_like(b)
     w_prev = jnp.zeros_like(b)
     phi_bar = beta1
-    delta1 = jnp.zeros((), dtype)
-    eps_k = jnp.zeros((), dtype)
-    cs = -jnp.ones((), dtype)
-    sn = jnp.zeros((), dtype)
+    delta1 = jnp.zeros(cshape, dtype)
+    eps_k = jnp.zeros(cshape, dtype)
+    cs = -jnp.ones(cshape, dtype)
+    sn = jnp.zeros(cshape, dtype)
     beta = beta1
+    iters0 = jnp.zeros(cshape, jnp.int32)
 
     def cond(state):
-        (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta, i) = state
-        return jnp.logical_and(i < maxiter, jnp.abs(phi_bar) > tol_abs)
+        (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta,
+         iters, i) = state
+        return jnp.logical_and(i < maxiter, jnp.any(jnp.abs(phi_bar) > tol_abs))
 
     def body(state):
-        (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta, i) = state
+        (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta,
+         iters, i) = state
+        active = jnp.abs(phi_bar) > tol_abs  # (C,)
         av = matvec(v)
-        alpha = jnp.vdot(v, av).real.astype(dtype)
+        alpha = _col_dot(v, av).astype(dtype)
         av = av - alpha * v - beta * v_prev
-        beta_new = jnp.linalg.norm(av)
+        beta_new = _col_norms(av)
         v_new = av / jnp.maximum(beta_new, eps)
 
         # previous rotation
@@ -115,20 +199,86 @@ def minres(matvec: Matvec, b: Array, *, x0: Array | None = None,
         cs_new = gamma1 / gamma2
         sn_new = beta_new / gamma2
         tau = cs_new * phi_bar
-        phi_bar_new = sn_new * phi_bar
+        phi_bar_new = jnp.where(active, sn_new * phi_bar, phi_bar)
 
         w_new = (v - delta2 * w - eps_k * w_prev) / gamma2
-        x_new = x + tau * w_new
+        # converged columns take a zero step (their Lanczos recurrence keeps
+        # running harmlessly; only the iterate and phi_bar are frozen)
+        x_new = x + jnp.where(active, tau, 0.0) * w_new
         return (x_new, v_new, v, w_new, w, phi_bar_new, delta1_next,
-                eps_next, cs_new, sn_new, beta_new, i + 1)
+                eps_next, cs_new, sn_new, beta_new, iters + active, i + 1)
 
     init = (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta,
-            jnp.zeros((), jnp.int32))
-    (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta, iters) = (
-        jax.lax.while_loop(cond, body, init))
+            iters0, jnp.zeros((), jnp.int32))
+    (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta, iters,
+     _) = jax.lax.while_loop(cond, body, init)
     # |phi_bar| is the QR-recurrence residual; like CG's it drifts from
     # ||b - A x|| in finite precision.  Recompute the true residual once at
     # exit (one matvec) so the reported norm matches the returned iterate.
-    res = jnp.linalg.norm(b - matvec(x))
-    return SolveResult(x=x, num_iters=iters, residual_norm=res,
-                       converged=res <= tol_abs)
+    res = _col_norms(b - matvec(x))
+    return _squeeze_result(
+        SolveResult(x=x, num_iters=iters, residual_norm=res,
+                    converged=res <= tol_abs), batched)
+
+
+# ---------------------------------------------------------------------------
+# Lockstep bank solvers: one bank matvec per iteration for S·C systems.
+# ---------------------------------------------------------------------------
+
+def _bank_solve(solver, bank_matvec: Matvec, b: Array, x0: Array | None,
+                kwargs) -> SolveResult:
+    """Flatten the bank axis into the column axis and run a lockstep solve.
+
+    ``bank_matvec`` maps (S, n, C) -> (S, n, C) applying operator ``s`` to
+    ``x[s]`` (e.g. the lockstep flavor of ``FastsumOperatorBank.matvec``);
+    the per-column machinery of :func:`cg`/:func:`minres` then gives every
+    (s, c) system its own step sizes, tolerance ``tol * max(||b[s,:,c]||,
+    1)``, and convergence mask — while each iteration costs exactly one bank
+    matvec (one spread + one forward FFT for the whole sweep).
+    """
+    if b.ndim not in (2, 3):
+        raise ValueError(f"bank rhs must be (S, n) or (S, n, C), got {b.shape}")
+    squeeze = b.ndim == 2
+    b3 = b[..., None] if squeeze else b
+    s, n, c = b3.shape
+
+    def flat_mv(u):  # (n, S*C) -> (n, S*C)
+        xb = jnp.moveaxis(u.reshape(n, s, c), 1, 0)
+        yb = bank_matvec(xb)
+        return jnp.moveaxis(yb, 0, 1).reshape(n, s * c)
+
+    def to_flat(v):  # (S, n, C) -> (n, S*C)
+        return jnp.moveaxis(v, 0, 1).reshape(n, s * c)
+
+    def from_flat(v):  # (n, S*C) -> (S, n, C)
+        return jnp.moveaxis(v.reshape(n, s, c), 1, 0)
+
+    x0f = None if x0 is None else to_flat(x0[..., None] if squeeze else x0)
+    sol = solver(flat_mv, to_flat(b3), x0=x0f, **kwargs)
+    x = from_flat(sol.x)
+    stats = [a.reshape(s, c) for a in
+             (sol.num_iters, sol.residual_norm, sol.converged)]
+    if squeeze:
+        x = x[..., 0]
+        stats = [a[:, 0] for a in stats]
+    return SolveResult(x, *stats)
+
+
+def cg_bank(bank_matvec: Matvec, b: Array, *, x0: Array | None = None,
+            tol: float = 1e-8, maxiter: int = 1000) -> SolveResult:
+    """Lockstep CG over a bank axis: b (S, n) or (S, n, C).
+
+    One bank matvec per iteration solves all S·C systems; per-system
+    tolerance masks freeze converged systems; the true residual is
+    recomputed at exit.  Result fields mirror the input layout: ``x``
+    (S, n[, C]), ``num_iters``/``residual_norm``/``converged`` (S[, C]).
+    """
+    return _bank_solve(cg, bank_matvec, b, x0,
+                       dict(tol=tol, maxiter=maxiter))
+
+
+def minres_bank(bank_matvec: Matvec, b: Array, *, x0: Array | None = None,
+                tol: float = 1e-8, maxiter: int = 1000) -> SolveResult:
+    """Lockstep MINRES over a bank axis (see :func:`cg_bank`)."""
+    return _bank_solve(minres, bank_matvec, b, x0,
+                       dict(tol=tol, maxiter=maxiter))

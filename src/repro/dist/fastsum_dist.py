@@ -110,6 +110,53 @@ def _pencil_matvec_local(plan: NfftPlan, mult_half: Array,
                                        spectral_op=spectral_op)
 
 
+def _fused_matvec_bank_local(plan: NfftPlan, mult_bank: Array,
+                             geometry: WindowGeometry, x: Array,
+                             axes: tuple[str, ...],
+                             backend: str | None = None) -> Array:
+    """Per-shard psum-mode bank body: ONE psum of the *stacked* multiplier
+    support blocks (the S·C system columns ride the channel axis, so the
+    wire payload is the single-operator support block times S·C — still one
+    collective, and still one spread + one forward FFT per shard)."""
+    reduce = (lambda block: jax.lax.psum(block, axes)) if axes else None
+    return fastsum_exec.fused_pipeline_bank(plan, mult_bank, geometry,
+                                            geometry, x,
+                                            spectral_reduce=reduce,
+                                            backend=backend)
+
+
+def _pencil_matvec_bank_local(plan: NfftPlan, mult_bank: Array,
+                              geometry: WindowGeometry, x: Array,
+                              spec: pencil_fft.PencilSpec,
+                              backend: str | None = None) -> Array:
+    """Per-shard pencil-mode bank body: per-device ``(S, slab)`` multiplier
+    slabs (the vmapped :func:`pencil_fft.multiplier_slab`) multiply the
+    shared pencil spectrum member-wise; one reduce_scatter / all_gather pair
+    moves the S·C-channel pencils."""
+    nb = mult_bank.shape[0]
+    c = x.shape[-1] if x.ndim >= 2 else 1
+    lockstep = x.ndim == 3
+
+    def spectral_op(g):
+        pencil = pencil_fft.pencil_accumulate(g, spec)
+        gh = pencil_fft.pencil_rfftn(pencil, spec)
+        slabs = jax.vmap(
+            lambda m: pencil_fft.multiplier_slab(m, spec))(mult_bank)
+        slabs = jnp.moveaxis(slabs, 0, -1)  # slab spectrum + (S,)
+        if lockstep:
+            ghb = gh.reshape(gh.shape[:-1] + (nb, c))
+        else:
+            ghb = gh[..., None, :]  # broadcast the shared spectrum over S
+        prod = slabs[..., :, None].astype(gh.dtype) * ghb
+        flat = prod.reshape(prod.shape[:-2] + (nb * c,))
+        y = pencil_fft.pencil_irfftn(flat, spec)
+        return pencil_fft.pencil_allgather(y, spec).astype(g.dtype)
+
+    return fastsum_exec.fused_pipeline_bank(plan, mult_bank, geometry,
+                                            geometry, x, backend=backend,
+                                            spectral_op=spectral_op)
+
+
 def resolve_pencil_spec(plan: NfftPlan, mesh, axes, pencil_axes=None):
     """PencilSpec the pencil mode would use, or None when it degenerates.
 
@@ -166,6 +213,72 @@ def make_sharded_matvec(plan: NfftPlan, mesh, axes, *,
     return jax.jit(_mv) if jit else _mv
 
 
+def make_sharded_matvec_bank(plan: NfftPlan, mesh, axes, *,
+                             lockstep: bool,
+                             spectral_mode: str = "psum",
+                             backend: str | None = None, pencil_axes=None,
+                             jit: bool = True):
+    """shard_map'd bank matvec body ``(mult_bank, base, w1d, x) -> y``.
+
+    The bank analogue of :func:`make_sharded_matvec`: the multiplier *bank*
+    ``(S,) + half-spectrum`` is replicated, the window geometry and the node
+    dimension of ``x`` are sharded over ``axes``, and the output is
+    ``(S, rows, C)`` with only the row axis sharded.  ``lockstep`` is the
+    static input flavor: False takes ``x`` (rows, C) (every member applied
+    to the same columns — spread runs with C channels), True takes ``x``
+    (S, rows, C) (member s applied to x[s], the bank Krylov shape — the S·C
+    system columns ride the channel axis).  Either way each shard runs ONE
+    spread and ONE forward transform, and the cross-shard accumulation is a
+    single collective: the psum of the stacked support blocks, or the
+    pencil reduce_scatter with per-device ``(S, slab)`` multiplier slabs.
+    """
+    axes = tuple(axes)
+    if spectral_mode not in SPECTRAL_MODES:
+        raise ValueError(
+            f"spectral_mode must be one of {SPECTRAL_MODES}, "
+            f"got {spectral_mode!r}")
+    spec = None
+    if spectral_mode == "pencil":
+        spec = resolve_pencil_spec(plan, mesh, axes, pencil_axes)
+    x_spec = P(None, axes, None) if lockstep else P(axes, None)
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(), P(axes, None), P(axes, None, None),
+                                 x_spec),
+                       out_specs=P(None, axes, None), check_rep=False)
+    def _mv(mult_bank, base_, w_, x_):
+        local = WindowGeometry(
+            base=base_, weights=w_,
+            perm=jnp.arange(base_.shape[0], dtype=jnp.int32))
+        if spec is not None:
+            return _pencil_matvec_bank_local(plan, mult_bank, local, x_,
+                                             spec, backend=backend)
+        return _fused_matvec_bank_local(plan, mult_bank, local, x_, axes,
+                                        backend=backend)
+
+    return jax.jit(_mv) if jit else _mv
+
+
+def _pad_ghost_geometry(win: WindowGeometry, n: int, nshard: int):
+    """Ghost-pad a window geometry so the node dimension shards evenly.
+
+    Ghost rows carry zero window weights (no spread/gather contribution)
+    and identity perm entries.  Returns ``(base, w1d, perm, inv_perm,
+    pad)``; ``inv_perm`` (a concrete numpy argsort) lets callers unsort
+    results with a row *take* — the equivalent multi-channel row scatter
+    costs ~10x more on XLA CPU.
+    """
+    pad = (-n) % nshard
+    base, w1d, perm = win.base, win.weights, win.perm
+    if pad:
+        base = jnp.pad(base, ((0, pad), (0, 0)))
+        w1d = jnp.pad(w1d, ((0, pad), (0, 0), (0, 0)))
+        perm = jnp.concatenate(
+            [perm, jnp.arange(n, n + pad, dtype=perm.dtype)])
+    inv_perm = jnp.asarray(np.argsort(np.asarray(perm)), perm.dtype)
+    return base, w1d, perm, inv_perm, pad
+
+
 def distributed_matvec_fn(op, mesh, axes, *, backend: str | None = None,
                           spectral_mode: str = "psum", pencil_axes=None):
     """Sharded drop-in for ``op.matvec`` (op: :class:`FastsumOperator`).
@@ -191,16 +304,8 @@ def distributed_matvec_fn(op, mesh, axes, *, backend: str | None = None,
         "distributed matvec requires a fused operator (build via make_fastsum)"
     n = op.n_source
     nshard = int(np.prod([mesh.shape[a] for a in axes]))
-    pad = (-n) % nshard
-
-    win = op.src_window
-    base, w1d, perm = win.base, win.weights, win.perm
-    if pad:
-        # ghost nodes: zero window weights (no spread/gather contribution)
-        base = jnp.pad(base, ((0, pad), (0, 0)))
-        w1d = jnp.pad(w1d, ((0, pad), (0, 0), (0, 0)))
-        perm = jnp.concatenate(
-            [perm, jnp.arange(n, n + pad, dtype=perm.dtype)])
+    base, w1d, perm, inv_perm, pad = _pad_ghost_geometry(
+        op.src_window, n, nshard)
 
     _mv = make_sharded_matvec(plan, mesh, axes, spectral_mode=spectral_mode,
                               backend=backend, pencil_axes=pencil_axes)
@@ -214,11 +319,66 @@ def distributed_matvec_fn(op, mesh, axes, *, backend: str | None = None,
         if pad:
             xp = jnp.pad(xp, ((0, pad), (0, 0)))
         y_sorted = _mv(op.multiplier_half, base, w1d, xp[perm])
-        y = jnp.zeros_like(y_sorted).at[perm].set(y_sorted)
+        y = y_sorted[inv_perm]
         if pad:
             y = y[:n]
         if not batched:
             y = y[..., 0]
         return y * out_scale - k0 * x
+
+    return matvec
+
+
+def distributed_matvec_bank_fn(bank, mesh, axes, *,
+                               backend: str | None = None,
+                               spectral_mode: str = "psum",
+                               pencil_axes=None):
+    """Sharded drop-in for ``bank.matvec`` (bank: ``FastsumOperatorBank``).
+
+    Returns ``mv(x)`` computing ``y[s] = (W̃_s - K_s(0) I) x`` for ``x`` of
+    shape (n,) or (n, C) (broadcast), or ``y[s] = (W̃_s - K_s(0) I) x[s]``
+    for ``x`` of shape (S, n, C) (lockstep — what a bank Krylov solver
+    iterates on), with the node dimension sharded over ``axes`` of ``mesh``.
+    Same ghost-node padding, backends, and spectral modes as
+    :func:`distributed_matvec_fn`; the one cross-shard collective carries
+    the bank stacked into the channel axis.
+    """
+    plan = bank.plan
+    axes = tuple(axes)
+    assert bank.scaled_tgt is None, \
+        "distributed bank matvec requires src == tgt nodes (shared geometry)"
+    n = bank.n_source
+    nshard = int(np.prod([mesh.shape[a] for a in axes]))
+    base, w1d, perm, inv_perm, pad = _pad_ghost_geometry(
+        bank.src_window, n, nshard)
+
+    kw = dict(spectral_mode=spectral_mode, backend=backend,
+              pencil_axes=pencil_axes)
+    # both flavors are lazy (jax.jit traces on first call), so building the
+    # unused one costs nothing
+    _mv_bcast = make_sharded_matvec_bank(plan, mesh, axes, lockstep=False,
+                                         **kw)
+    _mv_lock = make_sharded_matvec_bank(plan, mesh, axes, lockstep=True,
+                                        **kw)
+    k0 = bank.kernel_at_zero  # (S,); output scales are folded into the bank
+
+    def matvec(x: Array) -> Array:
+        lockstep = x.ndim == 3
+        if lockstep:
+            xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+            y_sorted = _mv_lock(bank.multiplier_bank, base, w1d, xp[:, perm])
+        else:
+            batched = x.ndim == 2
+            xb = x if batched else x[:, None]
+            xp = jnp.pad(xb, ((0, pad), (0, 0))) if pad else xb
+            y_sorted = _mv_bcast(bank.multiplier_bank, base, w1d, xp[perm])
+        y = y_sorted[:, inv_perm]
+        if pad:
+            y = y[:, :n]
+        if lockstep:
+            return y - k0[:, None, None] * x
+        if not batched:
+            return y[..., 0] - k0[:, None] * x
+        return y - k0[:, None, None] * x[None]
 
     return matvec

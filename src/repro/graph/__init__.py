@@ -2,8 +2,9 @@ from repro.graph.spectral import (  # noqa: F401
     kmeans, spectral_clustering, clustering_agreement, SpectralResult,
 )
 from repro.graph.ssl import (  # noqa: F401
-    allen_cahn_ssl, allen_cahn_multiclass, kernel_ssl_cg, kernel_ssl_eig,
-    make_training_vector,
+    allen_cahn_ssl, allen_cahn_multiclass, kernel_ssl_cg,
+    kernel_ssl_cg_multilayer, kernel_ssl_eig, make_training_vector,
 )
 from repro.graph.krr import (  # noqa: F401
-    krr_fit, krr_predict, krr_predict_direct, krr_prediction_operator)
+    krr_fit, krr_fit_sweep, krr_predict, krr_predict_direct,
+    krr_prediction_operator, krr_sweep_model, KRRSweepResult)

@@ -4,20 +4,33 @@ Dual solve:  alpha = (K + beta I)^{-1} f  by CG, where the Gram matrix
 K_ij = K(x_i - x_j) (note: *with* diagonal K(0), unlike the graph weight
 matrix) is applied via Algorithm 3.1.  Prediction at new points x uses the
 separate-target fast summation:  F(x) = sum_i alpha_i K(x_i - x).
+
+Model selection (``krr_fit_sweep``) runs the whole (sigma, beta) grid as ONE
+lockstep bank solve: the Gram operators for all sigmas share their NFFT plan
+and window geometry (they differ only in the spectral multiplier), so every
+CG iteration costs one bank matvec — one spread + one forward FFT for the
+entire grid — instead of |sigmas| x |betas| sequential solves.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.fastsum import FastsumOperator, FastsumParams, make_fastsum
-from repro.core.kernels import Kernel
+from repro.core.fastsum import (
+    FastsumOperator, FastsumParams, make_fastsum, make_fastsum_bank,
+)
+from repro.core.kernels import Kernel, make_kernel
 from repro.core.solvers import cg
 
 Array = jax.Array
+
+# serving cache capacity: how many target sets a model keeps planned
+# operators for (small keyed LRU — e.g. a validation set and a live set
+# alternating must both stay resident)
+PRED_CACHE_SLOTS = 4
 
 
 class KRRModel(NamedTuple):
@@ -27,8 +40,9 @@ class KRRModel(NamedTuple):
     params: FastsumParams
     num_iters: Array
     converged: Array
-    # single-slot serving cache {"target": (new_points, FastsumOperator)};
-    # mutable on purpose (shared by every copy of this immutable model).
+    # keyed LRU {insertion-ordered list of (key..., FastsumOperator)} of the
+    # last PRED_CACHE_SLOTS serving target sets; mutable on purpose (shared
+    # by every copy of this immutable model).
     pred_cache: dict | None = None
 
 
@@ -48,29 +62,106 @@ def krr_fit(kernel: Kernel, points: Array, f: Array, beta: float,
                     converged=sol.converged, pred_cache={})
 
 
+class KRRSweepResult(NamedTuple):
+    """One lockstep fit of the whole (sigma, beta) model-selection grid.
+
+    ``alphas[i, :, j]`` is the dual variable for ``(sigmas[i], betas[j])``;
+    ``num_iters``/``residual_norm``/``converged`` are (|sigmas|, |betas|)
+    per-system diagnostics from the lockstep CG (each system has its own
+    tolerance mask — an easy (sigma, beta) cell freezes once converged while
+    harder cells keep iterating).
+    """
+
+    alphas: Array  # (S_sigma, n, S_beta)
+    sigmas: tuple
+    betas: tuple
+    num_iters: Array  # (S_sigma, S_beta)
+    residual_norm: Array  # (S_sigma, S_beta)
+    converged: Array  # (S_sigma, S_beta)
+    kernel_name: str
+    train_points: Array
+    params: FastsumParams
+
+
+def krr_fit_sweep(kernel_name: str, points: Array, f: Array,
+                  betas: Sequence[float], sigmas: Sequence[float],
+                  params: FastsumParams, *, tol: float = 1e-8,
+                  maxiter: int = 1000) -> KRRSweepResult:
+    """Fit alpha = (K_sigma + beta I)^{-1} f for a whole (sigma, beta) grid.
+
+    Builds ONE operator bank over the shared training points (one member per
+    sigma; plan/geometry computed once) and solves all |sigmas| x |betas|
+    systems by lockstep bank CG: per iteration, one spread, one forward
+    rfftn, |sigmas| spectral multiplies, one batched inverse transform, one
+    gather — the beta shifts ride the channel axis for free.  ``kernel_name``
+    is a sigma-parameterized kernel ("gaussian" or "laplacian_rbf").
+    """
+    sigmas = tuple(float(s) for s in sigmas)
+    betas = tuple(float(b) for b in betas)
+    ns, nb = len(sigmas), len(betas)
+    kernels = [make_kernel(kernel_name, sigma=s) for s in sigmas]
+    bank = make_fastsum_bank(kernels, points, params)
+    # flat bank-major columns: column s*nb + j is the (sigmas[s], betas[j])
+    # system — the zero-transpose solver layout (matvec_tilde_columns)
+    beta_cols = jnp.tile(jnp.asarray(betas, f.dtype), ns)  # (S*B,)
+
+    def matvec_cols(u):  # (n, S*B) -> (n, S*B)
+        return bank.matvec_tilde_columns(u) + beta_cols[None, :] * u
+
+    rhs = jnp.broadcast_to(f[:, None], (f.shape[0], ns * nb))
+    sol = cg(matvec_cols, rhs, tol=tol, maxiter=maxiter)
+    alphas = jnp.moveaxis(sol.x.reshape(f.shape[0], ns, nb), 1, 0)
+    stats = [a.reshape(ns, nb) for a in
+             (sol.num_iters, sol.residual_norm, sol.converged)]
+    return KRRSweepResult(
+        alphas=alphas, sigmas=sigmas, betas=betas, num_iters=stats[0],
+        residual_norm=stats[1], converged=stats[2],
+        kernel_name=kernel_name, train_points=points, params=params)
+
+
+def krr_sweep_model(sweep: KRRSweepResult, i_sigma: int,
+                    j_beta: int) -> KRRModel:
+    """Extract one (sigma, beta) cell of a sweep as a servable KRRModel."""
+    return KRRModel(
+        alpha=sweep.alphas[i_sigma, :, j_beta],
+        train_points=sweep.train_points,
+        kernel=make_kernel(sweep.kernel_name, sigma=sweep.sigmas[i_sigma]),
+        params=sweep.params,
+        num_iters=sweep.num_iters[i_sigma, j_beta],
+        converged=sweep.converged[i_sigma, j_beta],
+        pred_cache={})
+
+
 def krr_prediction_operator(model: KRRModel, new_points: Array):
     """Plan-once prediction operator for ``new_points`` (serving hot path).
 
     Building the separate-target fast summation means recomputing the kernel
     Fourier coefficients, the Morton-sorted window geometries, and the fused
-    spectral multiplier — none of which depend on ``alpha``.  The operator
-    is cached on the model (single slot, keyed by target identity), so
-    repeated predicts against the same target set plan once and only pay the
-    O(n + m) pipeline per call.
+    spectral multiplier — none of which depend on ``alpha``.  Operators are
+    cached on the model in a small keyed LRU (:data:`PRED_CACHE_SLOTS`
+    entries), so alternating between a handful of serving target sets —
+    e.g. a validation set and a live traffic set — re-plans nothing; only a
+    genuinely new target set pays the planning cost and evicts the least
+    recently used entry.
     """
     cache = model.pred_cache
     # the dict is shared by NamedTuple._replace copies, so a hit must match
     # everything the operator was built from, not just the target points
     key = (new_points, model.train_points, model.kernel, model.params)
     if cache is not None:
-        hit = cache.get("target")
-        if (hit is not None and hit[0] is key[0] and hit[1] is key[1]
-                and hit[2] == key[2] and hit[3] == key[3]):
-            return hit[4]
+        entries = cache.setdefault("targets", [])
+        for i, (ek, op) in enumerate(entries):
+            if (ek[0] is key[0] and ek[1] is key[1] and ek[2] == key[2]
+                    and ek[3] == key[3]):
+                if i:  # move to front (most recently used)
+                    entries.insert(0, entries.pop(i))
+                return op
     op = make_fastsum(model.kernel, model.train_points, model.params,
                       target_points=new_points)
     if cache is not None:
-        cache["target"] = key + (op,)
+        entries = cache.setdefault("targets", [])
+        entries.insert(0, (key, op))
+        del entries[PRED_CACHE_SLOTS:]
     return op
 
 

@@ -136,7 +136,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, *,
 
 def run_graph_cell(n_nodes: int, d: int, multi_pod: bool, *,
                    setup_name: str = "setup2", spectral_mode: str = "psum",
-                   mesh=None) -> dict:
+                   mesh=None, bank_size: int = 1) -> dict:
     """Lower the distributed Algorithm 3.1 matvec at cluster scale.
 
     Lowers the *shipped* fused per-shard body (``dist.fastsum_dist.
@@ -144,6 +144,9 @@ def run_graph_cell(n_nodes: int, d: int, multi_pod: bool, *,
     ``spectral_mode="psum"``, reduce-scattered pencil FFT in ``"pencil"`` —
     so the 512-chip cells measure exactly what the runtime executes.
     ``mesh`` overrides the production mesh (small-mesh subprocess tests).
+    ``bank_size > 1`` lowers the multiplier-*bank* body instead
+    (``make_sharded_matvec_bank``, lockstep flavor — the shape one bank
+    Krylov iteration executes for an S-point sweep).
     """
     from repro.core.fastsum import SETUP_1, SETUP_2, SETUP_3
     from repro.dist import fastsum_dist
@@ -157,6 +160,7 @@ def run_graph_cell(n_nodes: int, d: int, multi_pod: bool, *,
     plan = params.nfft_plan(d)
     grid, taps = plan.grid_size, plan.taps
     tag = "-pencil" if spectral_mode == "pencil" else ""
+    banktag = f"-bank{bank_size}" if bank_size > 1 else ""
     # "pencil" silently runs the psum body when the mesh can't pencil the
     # grid — record the *effective* mode so a fallback cell can't publish
     # flat psum stats under the pencil label
@@ -166,29 +170,42 @@ def run_graph_cell(n_nodes: int, d: int, multi_pod: bool, *,
         effective = "psum"
     n_nodes += (-n_nodes) % chips  # ghost-pad so the node dim shards evenly
     rec = {
-        "arch": f"graph-fastsum{tag}-{setup_name}-d{d}",
+        "arch": f"graph-fastsum{tag}{banktag}-{setup_name}-d{d}",
         "shape": f"n{n_nodes}", "mesh": "x".join(map(str, mesh.shape.values())),
         "chips": chips, "kind": "graph_matvec",
         "spectral_mode": spectral_mode,
         "spectral_mode_effective": effective,
+        "bank": bank_size,
     }
     try:
-        mult = jax.ShapeDtypeStruct((grid,) * (d - 1) + (grid // 2 + 1,),
-                                    jnp.complex64)
+        spectrum = (grid,) * (d - 1) + (grid // 2 + 1,)
         base = jax.ShapeDtypeStruct((n_nodes, d), jnp.int32)
         w1d = jax.ShapeDtypeStruct((n_nodes, d, taps), jnp.float32)
-        x = jax.ShapeDtypeStruct((n_nodes, 1), jnp.float32)
-
-        matvec = fastsum_dist.make_sharded_matvec(
-            plan, mesh, axes, spectral_mode=spectral_mode, jit=False)
 
         from repro.dist.sharding import named
-        in_sh = (named(mesh, P()), named(mesh, P(axes, None)),
-                 named(mesh, P(axes, None, None)), named(mesh, P(axes, None)))
         t0 = time.perf_counter()
+        if bank_size > 1:
+            mult = jax.ShapeDtypeStruct((bank_size,) + spectrum,
+                                        jnp.complex64)
+            x = jax.ShapeDtypeStruct((bank_size, n_nodes, 1), jnp.float32)
+            matvec = fastsum_dist.make_sharded_matvec_bank(
+                plan, mesh, axes, lockstep=True,
+                spectral_mode=spectral_mode, jit=False)
+            in_sh = (named(mesh, P()), named(mesh, P(axes, None)),
+                     named(mesh, P(axes, None, None)),
+                     named(mesh, P(None, axes, None)))
+            out_sh = named(mesh, P(None, axes, None))
+        else:
+            mult = jax.ShapeDtypeStruct(spectrum, jnp.complex64)
+            x = jax.ShapeDtypeStruct((n_nodes, 1), jnp.float32)
+            matvec = fastsum_dist.make_sharded_matvec(
+                plan, mesh, axes, spectral_mode=spectral_mode, jit=False)
+            in_sh = (named(mesh, P()), named(mesh, P(axes, None)),
+                     named(mesh, P(axes, None, None)),
+                     named(mesh, P(axes, None)))
+            out_sh = named(mesh, P(axes, None))
         lowered = jax.jit(
-            matvec, in_shardings=in_sh,
-            out_shardings=named(mesh, P(axes, None))
+            matvec, in_shardings=in_sh, out_shardings=out_sh
         ).lower(mult, base, w1d, x)
         t1 = time.perf_counter()
         compiled = lowered.compile()
@@ -223,6 +240,9 @@ def main() -> None:
     ap.add_argument("--graph", action="store_true",
                     help="also run the paper-technique fastsum cells")
     ap.add_argument("--graph-n", type=int, default=2 ** 27)
+    ap.add_argument("--graph-bank", type=int, default=8,
+                    help="bank size S for the graph-fastsum-bank cells "
+                         "(<2 disables them)")
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--hlo-dir", default=None)
@@ -268,10 +288,18 @@ def main() -> None:
     if args.graph:
         for mp in meshes:
             for setup in ("setup1", "setup2", "setup3"):
-                for mode in ("psum", "pencil"):
+                # bank cells (S=8, the benchmark sweep width) sit next to
+                # the single-operator cells: same body, multiplier bank +
+                # S·C channels through the one collective
+                cells = [("psum", 1), ("pencil", 1)]
+                if args.graph_bank >= 2:
+                    cells += [("psum", args.graph_bank),
+                              ("pencil", args.graph_bank)]
+                for mode, bank in cells:
                     rec = run_graph_cell(args.graph_n, 3, mp,
                                          setup_name=setup,
-                                         spectral_mode=mode)
+                                         spectral_mode=mode,
+                                         bank_size=bank)
                     results.append(rec)
                     extra = ""
                     if rec["status"] == "ok":

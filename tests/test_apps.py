@@ -148,6 +148,67 @@ def test_krr_predict_plans_once(monkeypatch):
     np.testing.assert_allclose(np.asarray(p3), np.asarray(p1), atol=1e-12)
 
 
+def test_krr_pred_cache_lru_alternation(monkeypatch):
+    """Alternating serving target sets must not evict each other: the PR 4
+    single-slot cache re-planned on every switch; the keyed LRU keeps the
+    last few target sets resident (zero re-plans on alternation), and only
+    genuinely new sets evict the least recently used entry."""
+    from repro.graph import krr as krr_mod
+
+    rng = np.random.default_rng(8)
+    xtr = jnp.asarray(rng.uniform(-3, 3, (300, 2)))
+    ytr = jnp.asarray(np.sign(rng.standard_normal(300)))
+    model = krr_fit(make_kernel("gaussian", sigma=1.0), xtr, ytr, 1e-2,
+                    FastsumParams(n_bandwidth=32, m=3, eps_b=0.0))
+    val_set = jnp.asarray(rng.uniform(-3, 3, (100, 2)))
+    live_set = jnp.asarray(rng.uniform(-3, 3, (80, 2)))
+
+    calls = []
+    real = krr_mod.make_fastsum
+    monkeypatch.setattr(krr_mod, "make_fastsum",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    krr_predict(model, val_set)
+    krr_predict(model, live_set)
+    assert len(calls) == 2
+    for _ in range(3):  # two-target alternation: zero re-plans
+        krr_predict(model, val_set)
+        krr_predict(model, live_set)
+    assert len(calls) == 2
+
+    # capacity: PRED_CACHE_SLOTS distinct sets stay resident...
+    extras = [jnp.asarray(rng.uniform(-3, 3, (60 + i, 2)))
+              for i in range(krr_mod.PRED_CACHE_SLOTS - 1)]
+    for e in extras:
+        krr_predict(model, e)
+    n_now = len(calls)
+    krr_predict(model, live_set)  # most recent survivors still cached
+    krr_predict(model, extras[-1])
+    assert len(calls) == n_now
+    # ...but val_set (least recently used) was evicted and re-plans
+    krr_predict(model, val_set)
+    assert len(calls) == n_now + 1
+
+
+def test_kernel_ssl_multilayer_crescent():
+    """Aggregated two-layer kernel SSL (Gaussian + Laplacian RBF mixture):
+    one matvec per CG iteration for the whole layer sum, paper-level
+    misclassification on the crescent-fullmoon data."""
+    from repro.graph import kernel_ssl_cg_multilayer
+
+    pts, labs = crescent_fullmoon(2000, seed=3)
+    kernels = [make_kernel("gaussian", sigma=0.5),
+               make_kernel("laplacian_rbf", sigma=0.35)]
+    f, _ = make_training_vector(jnp.asarray(labs), 25, 2, key=KEY,
+                                positive_class=1)
+    res = kernel_ssl_cg_multilayer(
+        kernels, [0.7, 0.3], jnp.asarray(pts),
+        FastsumParams(n_bandwidth=128, m=4, eps_b=0.0), f, beta=1e3)
+    assert bool(res.converged)
+    pred = (res.u > 0).astype(np.int32)
+    mis = float(jnp.mean(pred != jnp.asarray(labs)))
+    assert mis < 0.05, mis
+
+
 def test_training_vector_clamps_small_classes():
     """A class smaller than n_samples_per_class contributes all its members
     and nothing else — the argsort over the 2.0 sentinel used to spill into

@@ -107,6 +107,43 @@ def test_graph_cell_pencil_payload_scales_inverse_p():
         f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"
 
 
+def test_graph_cell_bank_payload_scales_with_s():
+    """The bank dry-run cells lower the shipped bank body: the one
+    cross-shard collective carries the S stacked channel lanes, so its
+    per-device payload is ~S x the matching S=1 cell's — while the cell
+    still lowers (and the S=1/S=8 comparison confirms) a single spread +
+    forward-FFT stage, not S of them."""
+    code = """
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.launch.dryrun import run_graph_cell
+
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs[:8].reshape(2, 4), ("data", "model"))
+        for mode in ("psum", "pencil"):
+            r1 = run_graph_cell(4096, 3, False, setup_name="setup1",
+                                spectral_mode=mode, mesh=mesh, bank_size=1)
+            rb = run_graph_cell(4096, 3, False, setup_name="setup1",
+                                spectral_mode=mode, mesh=mesh, bank_size=8)
+            assert r1["status"] == "ok", r1.get("error")
+            assert rb["status"] == "ok", rb.get("error")
+            assert rb["bank"] == 8 and "bank8" in rb["arch"], rb["arch"]
+            p1 = r1["hlo_stats"]["collective_payload_bytes"]
+            pb = rb["hlo_stats"]["collective_payload_bytes"]
+            ratio = pb / p1
+            assert 7.0 < ratio < 9.0, (mode, p1, pb, ratio)
+            print(mode, "bank payload OK", p1, pb)
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = REPO_SRC
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, \
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"
+
+
 def test_decode_cell_serve_sharding():
     code = """
         import dataclasses, jax

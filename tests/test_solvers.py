@@ -82,6 +82,62 @@ def test_minres_reports_true_residual_on_ill_conditioned():
     assert true_res > tol_abs, (true_res, tol_abs)
 
 
+def test_batched_per_column_convergence_wildly_different_scales():
+    """Batched (n, C) solves keep independent per-column bookkeeping: with
+    columns spanning 12 orders of magnitude, every column must satisfy its
+    OWN tolerance ``tol * max(||b_c||, 1)``.  The old global-norm
+    bookkeeping let the 1e6-scale column dominate the convergence test (the
+    tiny columns stopped at absolute residuals far above their own
+    tolerance) and coupled all columns through a single step size."""
+    a = _spd(120, seed=7)
+    scales = np.array([1e-6, 1.0, 1e6])
+    b = jnp.asarray(np.random.default_rng(8).normal(size=(120, 3)) * scales)
+    tol = 1e-10
+    for solver in (cg, minres):
+        sol = solver(lambda x: a @ x, b, tol=tol, maxiter=2000)
+        assert sol.x.shape == (120, 3)
+        assert sol.num_iters.shape == (3,)
+        tol_abs = tol * np.maximum(
+            np.linalg.norm(np.asarray(b), axis=0), 1.0)
+        true_res = np.linalg.norm(
+            np.asarray(b) - np.asarray(a) @ np.asarray(sol.x), axis=0)
+        np.testing.assert_allclose(np.asarray(sol.residual_norm), true_res,
+                                   rtol=1e-6)
+        assert np.all(true_res <= tol_abs), (solver.__name__, true_res,
+                                             tol_abs)
+        assert bool(jnp.all(sol.converged))
+        # columns converge at different iteration counts — the easy tiny
+        # column froze early instead of riding along to the global stop
+        assert int(sol.num_iters[0]) < int(sol.num_iters[2])
+
+
+def test_batched_columns_match_independent_solves():
+    """Each column of a lockstep batched solve equals its own 1-D solve."""
+    a = _spd(100, seed=9)
+    b = jnp.asarray(np.random.default_rng(10).normal(size=(100, 4)))
+    for solver in (cg, minres):
+        batched = solver(lambda x: a @ x, b, tol=1e-12, maxiter=1000)
+        for c in range(4):
+            single = solver(lambda x: a @ x, b[:, c], tol=1e-12,
+                            maxiter=1000)
+            np.testing.assert_allclose(np.asarray(batched.x[:, c]),
+                                       np.asarray(single.x),
+                                       rtol=1e-8, atol=1e-8)
+
+
+def test_cg_complex_hpd():
+    """The per-column rewrite must keep complex Hermitian-positive-definite
+    operators working (conjugating inner products, modulus norms)."""
+    rng = np.random.default_rng(11)
+    m = rng.normal(size=(60, 60)) + 1j * rng.normal(size=(60, 60))
+    a = jnp.asarray(m @ m.conj().T + 60 * np.eye(60))
+    b = jnp.asarray(rng.normal(size=60) + 1j * rng.normal(size=60))
+    sol = cg(lambda x: a @ x, b, tol=1e-12, maxiter=500)
+    assert bool(sol.converged)
+    ref = np.linalg.solve(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(sol.x), ref, rtol=1e-8, atol=1e-8)
+
+
 def test_minres_indefinite():
     rng = np.random.default_rng(6)
     n = 100
