@@ -1,0 +1,148 @@
+"""Graph-predict serving scaling — batched ticks vs per-request predicts.
+
+Serves a burst of concurrent prediction requests (fresh query points per
+request, two tenant models sharing one training set) two ways:
+
+* **sequential** — one ``krr_predict`` per request, the pre-engine serving
+  path: every request's target set is new, so each call re-plans a full
+  prediction operator (joint source+target rescale, kernel Fourier
+  coefficients, spectral multiplier, source geometry) before its gather.
+  Request latency is the time-to-completion with all requests queued at
+  t=0: request i waits for requests 0..i-1.
+* **engine** — one :class:`~repro.serving.GraphServeEngine` over a
+  :class:`~repro.serving.GraphModelRegistry`: the tenants' grids are built
+  once at warmup (one bank transform), then every tick packs the active
+  slots' query chunks into ONE O(m) target geometry + ONE ragged gather.
+  Steady state replans nothing — asserted against the registry's build
+  counters before any timing is reported.
+
+``BENCH_serve.json`` (path overridable via REPRO_BENCH_SERVE_JSON) records
+p50/p99 latency and requests/s throughput for both paths plus the speedup,
+the trajectory artifact future serving PRs regress against.  Outputs of
+the two paths are cross-checked before timing counts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Reporter, quick
+from repro.core import FastsumParams, make_kernel
+from repro.graph import krr_fit, krr_predict
+from repro.serving import GraphModelRegistry, GraphServeEngine, PredictRequest
+
+BENCH_JSON = os.environ.get("REPRO_BENCH_SERVE_JSON", "BENCH_serve.json")
+
+PARAMS = FastsumParams(n_bandwidth=64, m=4)
+SIGMAS = (1.0, 1.5)  # two tenants sharing the training set
+REG = 1e-2
+
+
+def _requests(rng, n_requests: int, m_query: int):
+    """Concurrent burst: fresh query points, tenants round-robin."""
+    return [(f"tenant{i % len(SIGMAS)}",
+             rng.uniform(-2.5, 2.5, (m_query, 2)))
+            for i in range(n_requests)]
+
+
+def run(report: Reporter | None = None) -> None:
+    rep = report or Reporter("serve_scaling")
+    if quick():
+        n_train, n_requests, m_query = 4_000, 32, 128
+    else:
+        n_train, n_requests, m_query = 20_000, 64, 256
+    slots, chunk = 8, m_query  # one tick per request chunk
+
+    rng = np.random.default_rng(3)
+    xtr = jnp.asarray(rng.uniform(-3, 3, (n_train, 2)))
+    ytr = jnp.asarray(np.sign(rng.standard_normal(n_train)))
+    models = {f"tenant{i}": krr_fit(make_kernel("gaussian", sigma=s),
+                                    xtr, ytr, REG, PARAMS)
+              for i, s in enumerate(SIGMAS)}
+    burst = _requests(rng, n_requests, m_query)
+
+    # -- sequential baseline -------------------------------------------------
+    # warm the per-shape jit caches so neither path pays first-compile in
+    # the timed region; the per-request RE-PLAN (new target set every
+    # request) stays in the measurement — that is the cost under test
+    jax.block_until_ready(krr_predict(
+        models["tenant0"], jnp.asarray(rng.uniform(-2.5, 2.5,
+                                                   (m_query, 2)))))
+    seq_out, seq_latency = [], []
+    t0 = time.perf_counter()
+    for mid, q in burst:
+        out = krr_predict(models[mid], jnp.asarray(q))
+        jax.block_until_ready(out)
+        seq_out.append(np.asarray(out))
+        seq_latency.append(time.perf_counter() - t0)  # queued-at-t0 latency
+    t_seq = time.perf_counter() - t0
+
+    # -- batched engine ------------------------------------------------------
+    registry = GraphModelRegistry()
+    for mid, model in models.items():
+        registry.register(mid, model)
+    engine = GraphServeEngine(registry, slots=slots, chunk=chunk)
+    # warmup tick: builds both tenants' grids (ONE bank transform) and
+    # compiles the packed geometry+gather bodies at their fixed shapes
+    for i, (mid, _) in enumerate(burst[:2]):
+        engine.submit(PredictRequest(uid=-1 - i, model_id=mid,
+                                     query_points=rng.uniform(
+                                         -2.5, 2.5, (m_query, 2))))
+    engine.run_until_drained()
+    warm = registry.stats()
+
+    reqs = [PredictRequest(uid=i, model_id=mid, query_points=q)
+            for i, (mid, q) in enumerate(burst)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained()
+    t_eng = time.perf_counter() - t0
+
+    # correctness + zero-replan guards BEFORE reporting any timing
+    steady = registry.stats()
+    assert steady["grid_builds"] == warm["grid_builds"], \
+        "engine re-planned during the timed burst"
+    assert all(r.done and r.error is None for r in reqs)
+    parity = max(
+        float(np.max(np.abs(r.output - ref)) / max(np.max(np.abs(ref)), 1e-30))
+        for r, ref in zip(reqs, seq_out))
+    assert parity < 1e-2, f"engine/sequential divergence: {parity}"
+
+    eng_latency = [r.latency for r in reqs]
+    rows = []
+    for path, total, lats in (("sequential", t_seq, seq_latency),
+                              ("engine", t_eng, eng_latency)):
+        thr = n_requests / total
+        p50, p99 = (float(np.percentile(lats, p)) for p in (50, 99))
+        rep.add(f"{path} n={n_train} r={n_requests} m={m_query}",
+                thr, "req/s", p50_ms=round(p50 * 1e3, 2),
+                p99_ms=round(p99 * 1e3, 2))
+        rows.append({"path": path, "n_train": n_train,
+                     "requests": n_requests, "m_query": m_query,
+                     "slots": slots, "seconds": total,
+                     "throughput_rps": thr, "p50_s": p50, "p99_s": p99})
+    speedup = rows[1]["throughput_rps"] / rows[0]["throughput_rps"]
+    rows[1]["speedup"] = round(speedup, 2)
+    rows[1]["parity"] = parity
+    rows[1]["ticks"] = engine.counters["ticks"]
+    rows[1]["grid_builds_timed"] = steady["grid_builds"] - warm["grid_builds"]
+    rep.add("speedup", speedup, "x", requests=n_requests)
+    assert speedup >= 3.0, \
+        f"batched serving speedup {speedup:.2f}x < 3x at {n_requests} reqs"
+
+    rep.save()
+    with open(BENCH_JSON, "w") as fh:
+        json.dump({"bench": "serve_scaling", "unit": "req/s",
+                   "quick": quick(), "rows": rows}, fh, indent=1)
+    print(f"wrote {BENCH_JSON} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    run()

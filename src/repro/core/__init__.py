@@ -9,9 +9,10 @@ from repro.core.kernels import (  # noqa: F401
 )
 from repro.core.fastsum import (  # noqa: F401
     FastsumParams, FastsumOperator, FastsumOperatorBank,
-    NormalizedAdjacencyOperator,
+    NormalizedAdjacencyOperator, PredictionPlan,
     make_fastsum, make_fastsum_bank, make_normalized_adjacency,
-    make_normalized_adjacency_mixture,
+    make_normalized_adjacency_mixture, make_prediction_plan,
+    prediction_multiplier,
     SETUP_1, SETUP_2, SETUP_3,
     dense_weight_matrix, dense_normalized_adjacency, direct_matvec_tiled,
 )
@@ -23,9 +24,9 @@ from repro.core.nfft import (  # noqa: F401
 # window_spread/window_gather): re-exporting them here would shadow the
 # same-named, different-signature Pallas kernels in repro.kernels.ops.
 from repro.core.fastsum_exec import (  # noqa: F401
-    fused_matvec_tilde, fused_matvec_tilde_bank, fused_pipeline,
-    fused_pipeline_bank, fused_spectral_multiplier, spectral_support,
-    stack_multipliers,
+    fused_gather_columns, fused_matvec_tilde, fused_matvec_tilde_bank,
+    fused_pipeline, fused_pipeline_bank, fused_spectral_multiplier,
+    fused_transform_columns, spectral_support, stack_multipliers,
 )
 from repro.core.lanczos import (  # noqa: F401
     lanczos, block_lanczos, eigsh, eigsh_smallest_laplacian,

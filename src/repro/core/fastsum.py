@@ -278,6 +278,114 @@ def make_fastsum(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class PredictionPlan:
+    """Plan-once serving frame: a fixed node scaling over train ∪ domain.
+
+    :func:`make_fastsum` with ``target_points`` rescales the *union* of
+    sources and targets into the admissible ball, so the scale factor
+    ``rho`` — and with it the rescaled kernel, its Fourier coefficients,
+    and the fused spectral multiplier — depends on the target set.  That is
+    fine for a one-shot predict, but it makes every new target set a full
+    replan, which is exactly what a serving tick cannot afford.
+
+    A ``PredictionPlan`` instead freezes ``(rho, shift)`` over the training
+    points plus a declared serving *domain* (default: the training bounding
+    box expanded by ``margin``).  Any query set inside the domain is then
+    admissible under the frozen scaling, and serving it costs only an O(m)
+    target window geometry (:meth:`target_window`) — the NFFT plan, source
+    geometry, and every kernel's spectral multiplier
+    (:func:`prediction_multiplier`) are reusable verbatim.  One plan is
+    shared by every model fitted on the same training points (the
+    multi-tenant group of the graph-predict engine).
+    """
+
+    plan: NfftPlan
+    scaled_src: Array  # (n, d) training nodes under the frozen scaling
+    src_window: WindowGeometry
+    rho: float
+    shift: np.ndarray  # (d,) — plain numpy so the plan hashes/pickles
+    radius: float  # admissible ball radius for scaled nodes
+
+    @property
+    def n_source(self) -> int:
+        return self.scaled_src.shape[0]
+
+    def scale_targets(self, query_points: Array) -> Array:
+        """Map raw query points into the frozen scaled frame."""
+        q = jnp.asarray(query_points)
+        return (q - jnp.asarray(self.shift, q.dtype)) * self.rho
+
+    def admissible(self, scaled_targets: Array, *,
+                   slack: float = 1e-9) -> Array:
+        """Per-row mask: does a scaled query point fit the admissible ball?
+
+        Points outside wrap around the torus the NFFT periodizes over and
+        produce garbage kernel sums — callers must reject them (the serving
+        engine fails such requests instead of serving wrong values).
+        """
+        return jnp.linalg.norm(scaled_targets, axis=-1) <= self.radius + slack
+
+    def target_window(self, scaled_targets: Array) -> WindowGeometry:
+        """O(m) per-tick work: window geometry for (already scaled) targets."""
+        return build_window_geometry(self.plan, scaled_targets)
+
+
+def _domain_corners(points: np.ndarray, margin: float) -> np.ndarray:
+    """2^d corners of the training bounding box expanded by ``margin``."""
+    lo, hi = points.min(axis=0), points.max(axis=0)
+    mid, half = (lo + hi) / 2.0, np.maximum((hi - lo) / 2.0, 1e-12)
+    half = half * (1.0 + margin)
+    d = points.shape[1]
+    corners = np.stack(np.meshgrid(*[[-1.0, 1.0]] * d, indexing="ij"),
+                       axis=-1).reshape(-1, d)
+    return mid[None, :] + corners * half[None, :]
+
+
+def make_prediction_plan(points: Array, params: FastsumParams, *,
+                         domain_points: Optional[Array] = None,
+                         margin: float = 0.5) -> PredictionPlan:
+    """Kernel-independent serving plan over ``points`` (n, d).
+
+    ``domain_points`` declares the region query points may come from; when
+    omitted it defaults to the training bounding box expanded by ``margin``
+    per dimension.  The admissible-ball scaling is computed once over
+    train ∪ domain and frozen, so serving never replans (see
+    :class:`PredictionPlan`).
+    """
+    pts = jnp.asarray(points)
+    if domain_points is None:
+        domain = jnp.asarray(_domain_corners(np.asarray(pts), margin),
+                             pts.dtype)
+    else:
+        domain = jnp.asarray(domain_points, pts.dtype)
+    both = jnp.concatenate([pts, domain.reshape(-1, pts.shape[1])], axis=0)
+    scaled, rho, shift = scale_nodes(both, params.eps_b_eff)
+    scaled_src = scaled[: pts.shape[0]]
+    plan = params.nfft_plan(pts.shape[1])
+    return PredictionPlan(
+        plan=plan,
+        scaled_src=scaled_src,
+        src_window=build_window_geometry(plan, scaled_src),
+        rho=float(rho),
+        shift=np.asarray(shift),
+        radius=0.25 - params.eps_b_eff / 2.0,
+    )
+
+
+def prediction_multiplier(kernel: Kernel, pred: PredictionPlan,
+                          params: FastsumParams) -> Array:
+    """Fused serving multiplier for one kernel on a shared prediction plan.
+
+    The ``rho**exponent`` output correction is folded in (the pipeline is
+    linear), so gathered predictions need no per-column post-scaling —
+    mirroring :func:`make_fastsum_bank`'s folded per-member multipliers.
+    """
+    _, mult_half, out_scale, _ = _member_spectral(
+        kernel, pred.rho, pred.plan, params)
+    return mult_half * out_scale
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class FastsumOperatorBank:

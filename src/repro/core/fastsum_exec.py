@@ -473,17 +473,25 @@ def fused_pipeline_bank(plan: NfftPlan, multiplier_bank: Array,
     return out if batched else out[..., 0]
 
 
-def _bank_columns_core(plan: NfftPlan, multiplier_bank: Array,
-                       src: WindowGeometry, tgt: WindowGeometry, xb: Array,
-                       *, broadcast: bool, spectral_reduce=None,
-                       backend: str | None = None, spectral_op=None) -> Array:
-    """Shared bank pipeline body in flat column layout.
+def _bank_columns_transform(plan: NfftPlan, multiplier_bank: Array,
+                            src: WindowGeometry, xb: Array,
+                            *, broadcast: bool, spectral_reduce=None,
+                            backend: str | None = None,
+                            spectral_op=None) -> Array:
+    """Gather-free half of the bank pipeline: spread -> rfftn -> multiply ->
+    irfftn, returning the inverse-transformed grid (FFT order).
 
     ``xb`` is (n, K): the spread/FFT channel lanes.  ``broadcast=True``
     treats all K columns as shared right-hand sides and expands them
-    against every member (output K*S columns, S-major); ``broadcast=False``
+    against every member (output K*S channels, S-major); ``broadcast=False``
     treats K = S*C bank-major lockstep columns (column ``s*C + j`` belongs
-    to member ``s``) and multiplies member-wise (output K columns).
+    to member ``s``) and multiplies member-wise (output K channels).
+
+    The grid this returns depends only on the source side (nodes, spectral
+    multipliers, right-hand sides) — any number of target sets can be
+    gathered from it afterwards (:func:`window_gather` /
+    :func:`fused_gather_columns`), which is what the serving tier caches
+    per (model, dual-vector) column.
     """
     d = plan.d
     nb = multiplier_bank.shape[0]
@@ -506,7 +514,55 @@ def _bank_columns_core(plan: NfftPlan, multiplier_bank: Array,
             flat = jnp.zeros_like(flat).at[tuple(sup)].set(block)
         y = jnp.fft.irfftn(flat, s=(plan.grid_size,) * d,
                            axes=tuple(range(d)))
-    return window_gather(plan, tgt, y.astype(xb.dtype), backend=backend)
+    return y.astype(xb.dtype)
+
+
+def _bank_columns_core(plan: NfftPlan, multiplier_bank: Array,
+                       src: WindowGeometry, tgt: WindowGeometry, xb: Array,
+                       *, broadcast: bool, spectral_reduce=None,
+                       backend: str | None = None, spectral_op=None) -> Array:
+    """Full bank pipeline body in flat column layout (transform + gather)."""
+    y = _bank_columns_transform(plan, multiplier_bank, src, xb,
+                                broadcast=broadcast,
+                                spectral_reduce=spectral_reduce,
+                                backend=backend, spectral_op=spectral_op)
+    return window_gather(plan, tgt, y, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "backend"))
+def fused_transform_columns(plan: NfftPlan, multiplier_columns: Array,
+                            src: WindowGeometry, xb: Array,
+                            backend: str | None = None) -> Array:
+    """Per-column transform-to-grid: column ``j`` of ``xb`` (n, K) through
+    multiplier ``j`` of ``multiplier_columns`` ((K,) + half-spectrum) ->
+    grid ``(M,)*d + (K,)`` (real, FFT order).
+
+    One spread + one forward rfftn + one batched irfftn for all K columns;
+    the result is the gather-ready state of the prediction pipeline, so a
+    serving tick that caches it per (model, dual-vector) column pays only
+    a target-geometry build and one packed gather per tick
+    (:func:`fused_gather_columns`).
+    """
+    return _bank_columns_transform(plan, multiplier_columns, src, xb,
+                                   broadcast=False, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "backend"))
+def fused_gather_columns(plan: NfftPlan, tgt: WindowGeometry, grid: Array,
+                         col_index: Array,
+                         backend: str | None = None) -> Array:
+    """Ragged-packed gather: row ``r`` of the packed target geometry reads
+    channel ``col_index[r]`` of ``grid`` ((M,)*d + (K,)) -> (m,).
+
+    This is how a predict tick packs many users' query points into ONE
+    gather: concatenate every request's (scaled) query points into one
+    target set, label each row with the grid channel of its (model,
+    dual-vector) column, gather once, and split the output back per
+    request on the host.
+    """
+    out = window_gather(plan, tgt, grid, backend=backend)  # (m, K)
+    idx = col_index.astype(jnp.int32)[:, None]
+    return jnp.take_along_axis(out, idx, axis=1)[:, 0]
 
 
 def fused_pipeline_bank_columns(plan: NfftPlan, multiplier_bank: Array,

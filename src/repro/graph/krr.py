@@ -14,10 +14,13 @@ entire grid — instead of |sigmas| x |betas| sequential solves.
 
 from __future__ import annotations
 
+import hashlib
+import threading
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.fastsum import (
     FastsumOperator, FastsumParams, make_fastsum, make_fastsum_bank,
@@ -33,6 +36,20 @@ Array = jax.Array
 PRED_CACHE_SLOTS = 4
 
 
+def points_fingerprint(arr: Array) -> tuple:
+    """Content key for a point set: (shape, dtype, sha1 of the raw bytes).
+
+    Prediction-cache lookups key on this instead of array *object identity*:
+    a request queue reconstructs logically-identical query arrays every tick
+    (deserialization, host round-trips, ``jnp.asarray`` copies), and an
+    identity-keyed cache replans the operator on every one of them.  Content
+    keys make any round-tripped copy of a resident target set a hit.  The
+    O(n) hash is orders of magnitude cheaper than the plan it saves.
+    """
+    a = np.ascontiguousarray(np.asarray(arr))
+    return (a.shape, a.dtype.str, hashlib.sha1(a.tobytes()).digest())
+
+
 class KRRModel(NamedTuple):
     alpha: Array
     train_points: Array
@@ -42,7 +59,9 @@ class KRRModel(NamedTuple):
     converged: Array
     # keyed LRU {insertion-ordered list of (key..., FastsumOperator)} of the
     # last PRED_CACHE_SLOTS serving target sets; mutable on purpose (shared
-    # by every copy of this immutable model).
+    # by every copy of this immutable model).  All access goes through the
+    # lock stored inside the dict (see _pred_cache_lock): the serving
+    # engine's enqueue thread and tick loop mutate it concurrently.
     pred_cache: dict | None = None
 
 
@@ -132,7 +151,35 @@ def krr_sweep_model(sweep: KRRSweepResult, i_sigma: int,
         pred_cache={})
 
 
-def krr_prediction_operator(model: KRRModel, new_points: Array):
+def _pred_cache_lock(cache: dict) -> threading.Lock:
+    """The cache's lock, created on first use.
+
+    The dict is shared by every ``_replace`` copy of the model and mutated
+    (insert + LRU reorder + evict) by both the serving engine's enqueue
+    thread and its tick loop; unsynchronized list surgery corrupts the
+    insertion order (lost inserts, duplicated entries).  ``dict.setdefault``
+    is atomic under the GIL, so concurrent first calls agree on one lock.
+    """
+    lock = cache.get("lock")
+    if lock is None:
+        lock = cache.setdefault("lock", threading.Lock())
+    return lock
+
+
+def krr_pred_cache_stats(model: KRRModel) -> dict:
+    """Snapshot of the prediction-cache counters: hits / misses / plans."""
+    cache = model.pred_cache
+    if cache is None:
+        return {"hits": 0, "misses": 0, "plans": 0, "resident": 0}
+    with _pred_cache_lock(cache):
+        return {"hits": cache.get("hits", 0),
+                "misses": cache.get("misses", 0),
+                "plans": cache.get("plans", 0),
+                "resident": len(cache.get("targets", []))}
+
+
+def krr_prediction_operator(model: KRRModel, new_points: Array, *,
+                            cache_key=None):
     """Plan-once prediction operator for ``new_points`` (serving hot path).
 
     Building the separate-target fast summation means recomputing the kernel
@@ -143,29 +190,48 @@ def krr_prediction_operator(model: KRRModel, new_points: Array):
     e.g. a validation set and a live traffic set — re-plans nothing; only a
     genuinely new target set pays the planning cost and evicts the least
     recently used entry.
+
+    Two target sets are "the same" when their *content* matches: the key is
+    (shape, dtype, byte fingerprint) of the target and training arrays plus
+    kernel/params equality (:func:`points_fingerprint`) — a round-tripped
+    copy of a resident target set is a hit.  Callers that already know the
+    identity of their target set (e.g. a request queue with stable query-set
+    ids) can pass ``cache_key`` to skip hashing the target array; the caller
+    then owns the contract that equal keys mean equal content.
     """
     cache = model.pred_cache
-    # the dict is shared by NamedTuple._replace copies, so a hit must match
-    # everything the operator was built from, not just the target points
-    key = (new_points, model.train_points, model.kernel, model.params)
+    # a hit must match everything the operator was built from, not just the
+    # target points: the dict is shared by NamedTuple._replace copies
+    key = (cache_key if cache_key is not None
+           else points_fingerprint(new_points),
+           points_fingerprint(model.train_points), model.kernel, model.params)
     if cache is not None:
-        entries = cache.setdefault("targets", [])
-        for i, (ek, op) in enumerate(entries):
-            if (ek[0] is key[0] and ek[1] is key[1] and ek[2] == key[2]
-                    and ek[3] == key[3]):
-                if i:  # move to front (most recently used)
-                    entries.insert(0, entries.pop(i))
-                return op
+        with _pred_cache_lock(cache):
+            entries = cache.setdefault("targets", [])
+            for i, (ek, op) in enumerate(entries):
+                if ek == key:
+                    if i:  # move to front (most recently used)
+                        entries.insert(0, entries.pop(i))
+                    cache["hits"] = cache.get("hits", 0) + 1
+                    return op
+            cache["misses"] = cache.get("misses", 0) + 1
+    # plan outside the lock: planning is the expensive part, and holding the
+    # lock across it would serialize the engine's enqueue thread against the
+    # tick loop for the whole build
     op = make_fastsum(model.kernel, model.train_points, model.params,
                       target_points=new_points)
     if cache is not None:
-        entries = cache.setdefault("targets", [])
-        entries.insert(0, (key, op))
-        del entries[PRED_CACHE_SLOTS:]
+        with _pred_cache_lock(cache):
+            cache["plans"] = cache.get("plans", 0) + 1
+            entries = cache.setdefault("targets", [])
+            if not any(ek == key for ek, _ in entries):  # racing builder won
+                entries.insert(0, (key, op))
+                del entries[PRED_CACHE_SLOTS:]
     return op
 
 
-def krr_predict(model: KRRModel, new_points: Array, *, op=None) -> Array:
+def krr_predict(model: KRRModel, new_points: Array, *, op=None,
+                cache_key=None) -> Array:
     """F(x) = sum_i alpha_i K(x_i - x) via separate-target fast summation.
 
     The prediction operator is planned once per target set and cached on the
@@ -173,8 +239,51 @@ def krr_predict(model: KRRModel, new_points: Array, *, op=None) -> Array:
     manage caching yourself.
     """
     if op is None:
-        op = krr_prediction_operator(model, new_points)
+        op = krr_prediction_operator(model, new_points, cache_key=cache_key)
     return op.matvec_tilde(model.alpha)
+
+
+def krr_predict_many(model: KRRModel, queries: Sequence[Array],
+                     rhs: Sequence[Array | None] | None = None, *,
+                     cache_key=None) -> list:
+    """Batched prediction: many query sets through ONE plan application.
+
+    Packs all query sets into one concatenated target set (one prediction
+    operator — a cache hit when the packed content repeats), dedupes the
+    per-request dual vectors into channel columns (``rhs[i] is None`` means
+    the model's own ``alpha``; requests sharing a dual vector share a
+    column), runs one multi-RHS ``matvec_tilde``, and splits the rows back
+    per request.  R requests cost one spread + one FFT pair + one gather
+    instead of R full pipelines.
+    """
+    queries = [jnp.asarray(q) for q in queries]
+    if rhs is None:
+        rhs = [None] * len(queries)
+    if len(rhs) != len(queries):
+        raise ValueError(f"got {len(queries)} query sets but {len(rhs)} rhs")
+    packed = jnp.concatenate(queries, axis=0)
+    op = krr_prediction_operator(model, packed, cache_key=cache_key)
+
+    # dedupe dual vectors into columns (None -> the model's alpha)
+    cols, col_of_req = [], []
+    col_ids: dict = {}
+    for r in rhs:
+        cid = "alpha" if r is None else points_fingerprint(r)
+        if cid not in col_ids:
+            col_ids[cid] = len(cols)
+            cols.append(model.alpha if r is None else jnp.asarray(r))
+        col_of_req.append(col_ids[cid])
+
+    if len(cols) == 1:
+        out = op.matvec_tilde(cols[0])[:, None]  # (m_total, 1)
+    else:
+        out = op.matvec_tilde(jnp.stack(cols, axis=1))  # (m_total, C)
+    results, row = [], 0
+    for q, c in zip(queries, col_of_req):
+        m = q.shape[0]
+        results.append(out[row:row + m, c])
+        row += m
+    return results
 
 
 def krr_predict_direct(model: KRRModel, new_points: Array) -> Array:

@@ -229,6 +229,72 @@ def run_graph_cell(n_nodes: int, d: int, multi_pod: bool, *,
     return rec
 
 
+def run_graph_serve_cell(slots: int, chunk: int, d: int, multi_pod: bool, *,
+                         setup_name: str = "setup2", mesh=None) -> dict:
+    """Lower the graph-predict serve tick body at cluster scale.
+
+    The tick body of :class:`repro.serving.GraphServeEngine` — the packed
+    O(m) target window geometry build plus the ragged column gather over
+    the resident tenant grids (:func:`repro.core.fastsum_exec.
+    fused_gather_columns`) — is the entire steady-state per-tick work of
+    the serving tier (grids are cache-resident, nothing replans).  Query
+    rows shard across the mesh; the grid stack is replicated (it is
+    O(M^d * slots), small next to node data).
+    """
+    from repro.core import fastsum_exec
+    from repro.core import nfft as nfft_mod
+    from repro.core.fastsum import SETUP_1, SETUP_2, SETUP_3
+    from repro.dist.sharding import named
+    from jax.sharding import PartitionSpec as P
+
+    params = {"setup1": SETUP_1, "setup2": SETUP_2,
+              "setup3": SETUP_3}[setup_name]
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    plan = params.nfft_plan(d)
+    m_pack = slots * chunk
+    m_pack += (-m_pack) % chips  # pad rows so the pack shards evenly
+    rec = {
+        "arch": f"graph-serve-{setup_name}-d{d}",
+        "shape": f"slots{slots}x{chunk}",
+        "mesh": "x".join(map(str, mesh.shape.values())),
+        "chips": chips, "kind": "graph_serve_tick",
+        "rows": m_pack, "channels": slots,
+    }
+    try:
+        def tick(points, grid, col_index):
+            tgt = nfft_mod.build_window_geometry(plan, points)
+            return fastsum_exec.fused_gather_columns(
+                plan, tgt, grid, col_index)
+
+        pts = jax.ShapeDtypeStruct((m_pack, d), jnp.float32)
+        grid_s = jax.ShapeDtypeStruct((plan.grid_size,) * d + (slots,),
+                                      jnp.float32)
+        ci = jax.ShapeDtypeStruct((m_pack,), jnp.int32)
+        in_sh = (named(mesh, P(axes, None)), named(mesh, P()),
+                 named(mesh, P(axes)))
+        out_sh = named(mesh, P(axes))
+        t0 = time.perf_counter()
+        lowered = jax.jit(tick, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(pts, grid_s, ci)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+        stats = hlo_mod.analyze(compiled.as_text(), pod_boundary=256)
+        rec.update(status="ok", lower_s=round(t1 - t0, 2),
+                   compile_s=round(t2 - t1, 2),
+                   memory=_memory_analysis_dict(compiled),
+                   cost_analysis_raw=_cost_analysis_dict(compiled),
+                   hlo_stats=stats.to_json(),
+                   grid=plan.grid_size, bandwidth=plan.n_bandwidth, d=d)
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all",
@@ -243,6 +309,11 @@ def main() -> None:
     ap.add_argument("--graph-bank", type=int, default=8,
                     help="bank size S for the graph-fastsum-bank cells "
                          "(<2 disables them)")
+    ap.add_argument("--graph-serve", action="store_true",
+                    help="also lower the serving-tier tick body "
+                         "(packed target geometry + ragged gather)")
+    ap.add_argument("--serve-slots", type=int, default=64)
+    ap.add_argument("--serve-chunk", type=int, default=256)
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--hlo-dir", default=None)
@@ -308,6 +379,21 @@ def main() -> None:
                     print(f"[{rec['status']:7s}] {rec['arch']} x "
                           f"{rec['shape']} @ {rec['mesh']}{extra}",
                           flush=True)
+
+    if args.graph_serve:
+        for mp in meshes:
+            for setup in ("setup1", "setup2", "setup3"):
+                rec = run_graph_serve_cell(args.serve_slots,
+                                           args.serve_chunk, 3, mp,
+                                           setup_name=setup)
+                results.append(rec)
+                extra = ""
+                if rec["status"] == "ok":
+                    extra = (f" compile={rec['compile_s']}s"
+                             f" rows={rec['rows']}")
+                print(f"[{rec['status']:7s}] {rec['arch']} x "
+                      f"{rec['shape']} @ {rec['mesh']}{extra}",
+                      flush=True)
 
     suffix = f"_{args.tag}" if args.tag else ""
     path = os.path.join(args.out, f"dryrun{suffix}.json")

@@ -1,3 +1,11 @@
-"""Serving: batched prefill+decode engine with continuous batching."""
+"""Serving: continuous-batching engines.
+
+``engine`` is the token-LM prefill+decode engine; ``graph`` is the
+graph-predict tier (batched NFFT kernel predictions for multi-tenant KRR
+models — see the README "Serving" section).
+"""
 
 from repro.serving.engine import ServeEngine, Request  # noqa: F401
+from repro.serving.graph import (  # noqa: F401
+    GraphModelRegistry, GraphServeEngine, PredictRequest, TickStats,
+)

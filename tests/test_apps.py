@@ -189,6 +189,121 @@ def test_krr_pred_cache_lru_alternation(monkeypatch):
     assert len(calls) == n_now + 1
 
 
+def test_krr_pred_cache_content_keyed(monkeypatch):
+    """Regression: the cache used to key on array *object identity*, so a
+    round-tripped copy of the same target set (e.g. deserialized from a
+    request payload) re-planned every time.  Content keying makes any
+    byte-identical array a hit; an explicit ``cache_key`` skips hashing."""
+    from repro.graph import krr as krr_mod
+    from repro.graph import krr_pred_cache_stats
+
+    rng = np.random.default_rng(9)
+    xtr = jnp.asarray(rng.uniform(-3, 3, (200, 2)))
+    ytr = jnp.asarray(np.sign(rng.standard_normal(200)))
+    model = krr_fit(make_kernel("gaussian", sigma=1.0), xtr, ytr, 1e-2,
+                    FastsumParams(n_bandwidth=32, m=3, eps_b=0.0))
+    xte = rng.uniform(-3, 3, (60, 2))
+
+    calls = []
+    real = krr_mod.make_fastsum
+    monkeypatch.setattr(krr_mod, "make_fastsum",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    p1 = krr_predict(model, jnp.asarray(xte))
+    assert len(calls) == 1
+    # a distinct array object with the same contents: round trip through
+    # bytes, as a network/serialization boundary would produce
+    copy = jnp.asarray(np.frombuffer(
+        np.asarray(xte).tobytes(), np.asarray(xte).dtype).reshape(xte.shape))
+    p2 = krr_predict(model, copy)
+    assert len(calls) == 1  # content hit, no re-plan
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+    # explicit cache_key path: caller-supplied key, no content hashing
+    p3 = krr_predict(model, jnp.asarray(xte), cache_key="live")
+    assert len(calls) == 2  # different key -> its own entry
+    krr_predict(model, jnp.asarray(rng.uniform(-3, 3, (60, 2))),
+                cache_key="live")  # same key: hit even for other contents
+    assert len(calls) == 2
+    np.testing.assert_allclose(np.asarray(p3), np.asarray(p1), atol=1e-12)
+
+    stats = krr_pred_cache_stats(model)
+    assert stats["hits"] == 2 and stats["plans"] == 2
+
+
+def test_krr_pred_cache_thread_safety():
+    """Regression: the shared ``pred_cache`` dict was mutated from serving
+    threads with no synchronization.  Hammer one model from many threads
+    with more rotating target sets than cache slots (constant insert +
+    evict churn) and check nothing corrupts and results stay exact."""
+    import threading
+
+    from repro.graph import krr as krr_mod
+
+    rng = np.random.default_rng(10)
+    xtr = jnp.asarray(rng.uniform(-3, 3, (150, 2)))
+    ytr = jnp.asarray(np.sign(rng.standard_normal(150)))
+    model = krr_fit(make_kernel("gaussian", sigma=1.0), xtr, ytr, 1e-2,
+                    FastsumParams(n_bandwidth=32, m=3, eps_b=0.0))
+    n_sets = krr_mod.PRED_CACHE_SLOTS + 3  # force eviction churn
+    sets = [jnp.asarray(rng.uniform(-3, 3, (40, 2))) for _ in range(n_sets)]
+    expected = [np.asarray(krr_predict_direct(model, s)) for s in sets]
+
+    errors = []
+
+    def worker(seed):
+        order = np.random.default_rng(seed).permutation(n_sets)
+        try:
+            for i in np.tile(order, 3):
+                got = np.asarray(krr_predict(model, sets[i]))
+                np.testing.assert_allclose(got, expected[i], atol=1e-2)
+        except Exception as exc:  # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    # cache respected its capacity bound throughout
+    assert len(model.pred_cache["targets"]) <= krr_mod.PRED_CACHE_SLOTS
+
+
+def test_krr_predict_many_single_plan(monkeypatch):
+    """Batched serving: predictions for several query sets (and per-request
+    dual vectors) pack into ONE planned operator + ONE multi-RHS matvec,
+    and match per-request predictions."""
+    from repro.graph import krr as krr_mod
+    from repro.graph import krr_predict_many
+
+    rng = np.random.default_rng(11)
+    xtr = jnp.asarray(rng.uniform(-3, 3, (200, 2)))
+    ytr = jnp.asarray(np.sign(rng.standard_normal(200)))
+    model = krr_fit(make_kernel("gaussian", sigma=1.0), xtr, ytr, 1e-2,
+                    FastsumParams(n_bandwidth=32, m=3, eps_b=0.0))
+    queries = [jnp.asarray(rng.uniform(-3, 3, (m, 2))) for m in (30, 7, 55)]
+    custom = jnp.asarray(rng.standard_normal(200))
+    rhs = [None, custom, None]
+
+    calls = []
+    real = krr_mod.make_fastsum
+    monkeypatch.setattr(krr_mod, "make_fastsum",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    outs = krr_predict_many(model, queries, rhs=rhs)
+    assert len(calls) == 1  # one packed plan for all three requests
+    assert [o.shape[0] for o in outs] == [30, 7, 55]
+    np.testing.assert_allclose(
+        np.asarray(outs[0]),
+        np.asarray(krr_predict_direct(model, queries[0])), atol=1e-2)
+    np.testing.assert_allclose(
+        np.asarray(outs[2]),
+        np.asarray(krr_predict_direct(model, queries[2])), atol=1e-2)
+    np.testing.assert_allclose(
+        np.asarray(outs[1]),
+        np.asarray(krr_predict_direct(
+            model._replace(alpha=custom), queries[1])), atol=1e-2)
+
+
 def test_kernel_ssl_multilayer_crescent():
     """Aggregated two-layer kernel SSL (Gaussian + Laplacian RBF mixture):
     one matvec per CG iteration for the whole layer sum, paper-level

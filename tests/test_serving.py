@@ -77,3 +77,28 @@ def test_mixed_progress_batch(setup):
     assert r1.done and r2.done
     assert r1.output == _manual_greedy(cfg, params, [5, 6, 7, 8], 8, 64)
     assert r2.output == _manual_greedy(cfg, params, [9, 10], 8, 64)
+
+
+def test_recycled_slot_has_no_stale_cache(setup):
+    """Regression guard for slot recycling: a short request admitted into a
+    slot that previously held a LONGER request must not read the earlier
+    tenant's KV entries past its own position.  Interleave short and long
+    requests so each slot is recycled several times at shrinking lengths,
+    and require exact agreement with unbatched decoding."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    # long first (fills deep cache rows), then progressively shorter ones
+    # recycled into the same slots; distinct prompts per request
+    specs = [(14, 10), (3, 4), (12, 8), (2, 3), (5, 6), (2, 8)]
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n, _ in specs]
+    engine = ServeEngine(cfg, params, slots=2, max_seq=64)
+    reqs = [Request(uid=i, tokens=p, max_new_tokens=specs[i][1])
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained()
+    for r, p, (_, n_new) in zip(reqs, prompts, specs):
+        assert r.done
+        ref = _manual_greedy(cfg, params, p, n_new, 64)
+        assert r.output == ref, (r.uid, r.output, ref)

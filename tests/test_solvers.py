@@ -111,6 +111,53 @@ def test_batched_per_column_convergence_wildly_different_scales():
         assert int(sol.num_iters[0]) < int(sol.num_iters[2])
 
 
+def test_maxiter_exhaustion_exit_reporting_mixed_scales():
+    """When ``maxiter`` runs out with only SOME columns converged, the exit
+    report must stay per-column consistent: ``residual_norm`` is the true
+    recomputed ``||b_c - A x_c||``, ``converged`` is derived from it against
+    the column's own tolerance, and ``num_iters`` shows which columns froze
+    early vs. rode to the iteration cap.  Mixed per-column scales make the
+    recurrence residuals drift by very different amounts, which is exactly
+    where stale-recurrence reporting used to lie."""
+    # ill-conditioned SPD: diag spectrum over 10 orders of magnitude
+    n = 100
+    rng = np.random.default_rng(12)
+    q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    eig = np.logspace(-8, 2, n)
+    a = jnp.asarray(q @ np.diag(eig) @ q.T)
+    scales = np.array([1e-5, 1.0, 1e5])
+    b = jnp.asarray(rng.normal(size=(n, 3)) * scales)
+    tol = 1e-9
+    maxiter = 25  # far too few for this conditioning
+    for solver in (cg, minres):
+        sol = solver(lambda x: a @ x, b, tol=tol, maxiter=maxiter)
+        res = np.asarray(sol.residual_norm)
+        iters = np.asarray(sol.num_iters)
+        conv = np.asarray(sol.converged)
+        # 1. residual_norm is the TRUE residual of the returned x, not the
+        #    drifted recurrence scalar
+        true_res = np.linalg.norm(
+            np.asarray(b) - np.asarray(a) @ np.asarray(sol.x), axis=0)
+        np.testing.assert_allclose(res, true_res, rtol=1e-6,
+                                   err_msg=solver.__name__)
+        # 2. converged agrees with the true residual per column, against
+        #    that column's own tolerance
+        tol_abs = tol * np.maximum(
+            np.linalg.norm(np.asarray(b), axis=0), 1.0)
+        np.testing.assert_array_equal(conv, true_res <= tol_abs,
+                                      err_msg=solver.__name__)
+        # 3. the cap was genuinely hit — this test exercises the exhaustion
+        #    path, not ordinary convergence
+        assert not conv.all(), (solver.__name__, res, tol_abs)
+        assert iters.max() == maxiter, (solver.__name__, iters)
+        # 4. num_iters is per-column: an unconverged column reports the full
+        #    cap; a converged one reports where it froze
+        assert np.all(iters[~conv] == maxiter), (solver.__name__, iters)
+        assert np.all(iters <= maxiter)
+        # 5. the returned x is still the best-so-far iterate, finite
+        assert np.all(np.isfinite(np.asarray(sol.x)))
+
+
 def test_batched_columns_match_independent_solves():
     """Each column of a lockstep batched solve equals its own 1-D solve."""
     a = _spd(100, seed=9)
