@@ -137,6 +137,43 @@ def run(report: Reporter | None = None) -> None:
     assert speedup >= 3.0, \
         f"batched serving speedup {speedup:.2f}x < 3x at {n_requests} reqs"
 
+    # -- guard overhead ------------------------------------------------------
+    # the runtime guards (deadline checks, non-finite output scan, circuit
+    # breaker, plan validation) ride the hot tick path; the acceptance gate
+    # is that guarded throughput stays within 5% of unguarded.  Best-of-3
+    # per mode keeps scheduler noise out of the ratio; registry grids are
+    # already warm so both modes time pure tick work.
+    def _burst_time(guards: bool) -> float:
+        eng = GraphServeEngine(registry, slots=slots, chunk=chunk,
+                               guards=guards)
+        eng.submit(PredictRequest(uid=-9, model_id="tenant0",
+                                  query_points=rng.uniform(
+                                      -2.5, 2.5, (m_query, 2))))
+        eng.run_until_drained()  # compile warmup for this engine
+        best = float("inf")
+        for rep_i in range(3):
+            rs = [PredictRequest(uid=1000 * rep_i + i, model_id=mid,
+                                 query_points=q)
+                  for i, (mid, q) in enumerate(burst)]
+            t0 = time.perf_counter()
+            for r in rs:
+                eng.submit(r)
+            eng.run_until_drained()
+            best = min(best, time.perf_counter() - t0)
+            assert all(r.done and r.error is None for r in rs)
+        return best
+
+    t_unguarded = _burst_time(False)
+    t_guarded = _burst_time(True)
+    overhead = t_guarded / t_unguarded - 1.0
+    rows.append({"path": "guard_overhead", "n_train": n_train,
+                 "requests": n_requests, "m_query": m_query,
+                 "guarded_s": t_guarded, "unguarded_s": t_unguarded,
+                 "overhead_frac": round(overhead, 4)})
+    rep.add("guard overhead", overhead * 100.0, "%", requests=n_requests)
+    assert overhead <= 0.05, \
+        f"runtime guards cost {overhead * 100:.1f}% > 5% of tick throughput"
+
     rep.save()
     with open(BENCH_JSON, "w") as fh:
         json.dump({"bench": "serve_scaling", "unit": "req/s",

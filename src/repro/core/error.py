@@ -25,7 +25,14 @@ Array = jax.Array
 
 
 def lemma31_bound(eta: float, eps: float) -> float:
-    """The Lemma 3.1 right-hand side; inf if the eps < eta condition fails."""
+    """The Lemma 3.1 right-hand side; inf if the eps < eta condition fails.
+
+    Degenerate estimates (non-finite eta/eps from a poisoned operator, or
+    eta <= 0 from an isolated node) also map to inf — the runtime guard
+    (:mod:`repro.runtime.guards`) relies on "bound can never be optimistic
+    garbage": every invalid input reads as the worst case, never NaN."""
+    if not (np.isfinite(eta) and eta > 0.0 and np.isfinite(eps)):
+        return float("inf")
     if eps >= eta:
         return float("inf")
     return eps * (1.0 + eta) / (eta * (eta - eps))

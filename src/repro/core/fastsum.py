@@ -77,7 +77,18 @@ def scale_nodes(points: Array, eps_b: float, *, center: bool = True):
 
     Returns (scaled_nodes, rho, shift): ``scaled = (points - shift) * rho``
     with ``||scaled||_2 <= 1/4 - eps_b/2``.
+
+    Non-finite coordinates are rejected at plan time: a single NaN node
+    would poison the min/max centering, collapse ``rho`` to NaN, and
+    silently corrupt the Morton geometry and every operator planned from
+    it.  (The check only runs on concrete arrays — all planners call this
+    eagerly — so traced callers are unaffected.)
     """
+    if not isinstance(points, jax.core.Tracer) and \
+            not bool(jnp.all(jnp.isfinite(points))):
+        raise ValueError(
+            "non-finite coordinates in the point set; scrub the data or "
+            "drop the offending nodes before planning")
     if center:
         lo = jnp.min(points, axis=0)
         hi = jnp.max(points, axis=0)

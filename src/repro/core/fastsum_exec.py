@@ -55,6 +55,7 @@ multi-column solves amortize spread and gather over the batch.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +93,39 @@ def resolve_backend(backend: str | None) -> str:
 
 def _pallas_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# Sticky degradation state for the *auto-selected* pallas window backend:
+# if its lowering fails (e.g. an unexercised Mosaic path on new hardware),
+# fall back to the xla backend for the rest of the process with ONE warning
+# instead of raising on every matvec.  An *explicit* ``backend="pallas"``
+# still raises — asking for pallas by name means wanting the failure.
+_PALLAS_FALLBACK = {"warned": False, "disabled": False}
+
+
+def _auto_backend(backend: str | None) -> bool:
+    return backend is None or backend == "auto"
+
+
+def _note_pallas_fallback(exc: Exception) -> None:
+    _PALLAS_FALLBACK["disabled"] = True
+    if not _PALLAS_FALLBACK["warned"]:
+        _PALLAS_FALLBACK["warned"] = True
+        warnings.warn(
+            "auto-selected pallas window backend failed to lower "
+            f"({type(exc).__name__}: {exc}); degrading to the xla window "
+            "backend for the rest of the process (pass backend='pallas' "
+            "explicitly to make this an error)",
+            RuntimeWarning, stacklevel=4)
+
+
+def _window_backend(backend: str | None) -> str:
+    """:func:`resolve_backend` plus the sticky auto-fallback state."""
+    resolved = resolve_backend(backend)
+    if (resolved == "pallas" and _auto_backend(backend)
+            and _PALLAS_FALLBACK["disabled"]):
+        return "xla"
+    return resolved
 
 
 def fused_spectral_multiplier(plan: NfftPlan, b_hat: Array) -> Array:
@@ -317,10 +351,16 @@ def window_spread(plan: NfftPlan, geometry: WindowGeometry, x: Array, *,
     d, grid, taps = plan.d, plan.grid_size, plan.taps
     pad_n = padded_grid_size(plan)
     xs = x[geometry.perm]  # align node values with the Morton-sorted rows
-    if resolve_backend(backend) == "pallas":
-        gpad = nfft_window.window_spread(
-            xs, geometry.base, geometry.weights, padded_size=pad_n,
-            interpret=_pallas_interpret())
+    if _window_backend(backend) == "pallas":
+        try:
+            gpad = nfft_window.window_spread(
+                xs, geometry.base, geometry.weights, padded_size=pad_n,
+                interpret=_pallas_interpret())
+        except Exception as exc:  # lowering failure surfaces at trace time
+            if not _auto_backend(backend):
+                raise
+            _note_pallas_fallback(exc)
+            gpad = _xla_spread(plan, geometry, xs)
     else:
         gpad = _xla_spread(plan, geometry, xs)
     # fold the periodic pad back: unwrapped u and u - M are the same cell
@@ -345,10 +385,16 @@ def window_gather(plan: NfftPlan, geometry: WindowGeometry, g: Array, *,
     d, taps = plan.d, plan.taps
     rolled = jnp.roll(g, (window_shift(plan),) * d, axis=tuple(range(d)))
     gpad = jnp.pad(rolled, [(0, taps - 1)] * d + [(0, 0)], mode="wrap")
-    if resolve_backend(backend) == "pallas":
-        out = nfft_window.window_gather(
-            gpad, geometry.base, geometry.weights,
-            interpret=_pallas_interpret())
+    if _window_backend(backend) == "pallas":
+        try:
+            out = nfft_window.window_gather(
+                gpad, geometry.base, geometry.weights,
+                interpret=_pallas_interpret())
+        except Exception as exc:  # lowering failure surfaces at trace time
+            if not _auto_backend(backend):
+                raise
+            _note_pallas_fallback(exc)
+            out = _xla_gather(plan, geometry, gpad)
     else:
         out = _xla_gather(plan, geometry, gpad)
     # restore node order via the inverse permutation as a row *take*: the
@@ -362,7 +408,7 @@ def window_gather(plan: NfftPlan, geometry: WindowGeometry, g: Array, *,
 def fused_pipeline(plan: NfftPlan, multiplier_half: Array,
                    src: WindowGeometry, tgt: WindowGeometry, x: Array,
                    spectral_reduce=None, backend: str | None = None,
-                   spectral_op=None) -> Array:
+                   spectral_op=None, grid_hook=None) -> Array:
     """spread -> rfftn -> multiply -> irfftn -> gather, one traceable body.
 
     Two hooks let the distributed matvec reuse this single implementation
@@ -380,11 +426,17 @@ def fused_pipeline(plan: NfftPlan, multiplier_half: Array,
       multiply).
 
     ``backend`` selects the window-step backend (see :func:`resolve_backend`).
+    ``grid_hook``, when given, maps the spread grid ``(M,)*d + (C,)`` to a
+    grid of the same shape before the spectral section — the deterministic
+    fault-injection seam (:mod:`repro.runtime.faultinject` poisons it to
+    model grid memory corruption); production callers leave it ``None``.
     """
     d = plan.d
     batched = x.ndim == 2
     xb = x if batched else x[:, None]
     g = window_spread(plan, src, xb, backend=backend)
+    if grid_hook is not None:
+        g = grid_hook(g)
     if spectral_op is not None:
         y = spectral_op(g)
     else:

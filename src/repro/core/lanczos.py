@@ -36,6 +36,22 @@ class LanczosResult(NamedTuple):
     #   iteration, so no ||r0|| is recorded anywhere)
     basis: Array  # (k, n) rows are the Lanczos vectors q_1..q_k
     residual_beta: Array  # beta_{k+1}
+    breakdown_iter: Array | None = None  # first step with a non-finite
+    #   recurrence (scalar int32); == num_iters when the run stayed clean.
+    #   Steps at/after it never write into alphas/betas/basis.
+
+
+class EigshHealth(NamedTuple):
+    """Guard flags for an eigsh run (see :class:`repro.core.SolveHealth`).
+
+    ``nonfinite`` — the Lanczos recurrence went non-finite (poisoned
+    matvec, breakdown); the subspace was truncated at ``breakdown_iter``
+    and the invalid tail of T was sentinel-masked out of the returned
+    Ritz window, but ``residual_bounds`` are inf: do not trust the pairs.
+    """
+
+    nonfinite: Array  # bool scalar
+    breakdown_iter: Array  # int32 scalar, == subspace size when clean
 
 
 def lanczos(matvec: Matvec, v0: Array, num_iters: int,
@@ -50,7 +66,8 @@ def lanczos(matvec: Matvec, v0: Array, num_iters: int,
     betas = jnp.zeros((num_iters,), dtype=dtype)
 
     def body(i, carry):
-        basis, alphas, betas, beta_next = carry
+        basis, alphas, betas, beta_next, breakdown = carry
+        alive = i < breakdown
         qi = basis[i]
         w = matvec(qi)
         alpha = jnp.vdot(qi, w).real.astype(dtype)
@@ -62,8 +79,13 @@ def lanczos(matvec: Matvec, v0: Array, num_iters: int,
                 coeffs = (basis * mask) @ w
                 w = w - ((basis * mask).T @ coeffs)
         beta = jnp.linalg.norm(w)
-        alphas = alphas.at[i].set(alpha)
-        write = i + 1 < num_iters
+        # breakdown guard: a non-finite recurrence step (poisoned matvec)
+        # truncates the factorization — nothing at/after it is ever
+        # written, so NaNs cannot enter the carried basis or T entries
+        ok = alive & jnp.isfinite(alpha) & jnp.isfinite(beta)
+        breakdown = jnp.where(alive & ~ok, i, breakdown)
+        alphas = alphas.at[i].set(jnp.where(ok, alpha, 0.0))
+        write = jnp.logical_and(i + 1 < num_iters, ok)
         q_next = jnp.where(beta > 0, w / jnp.maximum(beta, jnp.finfo(dtype).tiny), 0.0)
         basis = jax.lax.cond(
             write,
@@ -77,19 +99,22 @@ def lanczos(matvec: Matvec, v0: Array, num_iters: int,
             lambda b: b,
             betas,
         )
-        return basis, alphas, betas, beta
+        return basis, alphas, betas, jnp.where(ok, beta, 0.0), breakdown
 
-    basis, alphas, betas, beta_last = jax.lax.fori_loop(
-        0, num_iters, body, (basis, alphas, betas, jnp.zeros((), dtype))
+    basis, alphas, betas, beta_last, breakdown = jax.lax.fori_loop(
+        0, num_iters, body, (basis, alphas, betas, jnp.zeros((), dtype),
+                             jnp.asarray(num_iters, jnp.int32))
     )
     return LanczosResult(alphas=alphas, betas=betas, basis=basis,
-                         residual_beta=beta_last)
+                         residual_beta=beta_last, breakdown_iter=breakdown)
 
 
 class BlockLanczosResult(NamedTuple):
     t_matrix: Array  # (s, s) block-tridiagonal projection, s = blocks*b
     basis: Array  # (blocks, n, b) orthonormal block Lanczos basis
     residual_block: Array  # (b, b) B_{blocks+1} (R factor of the residual)
+    breakdown_iter: Array | None = None  # first block step with a
+    #   non-finite recurrence; == num_blocks when clean
 
 
 def block_lanczos(matvec: Matvec, v0: Array, num_blocks: int,
@@ -113,7 +138,7 @@ def block_lanczos(matvec: Matvec, v0: Array, num_blocks: int,
     b_blocks = jnp.zeros((num_blocks, b, b), dtype=dtype)  # B_j couples j-1,j
 
     def body(j, carry):
-        basis, a_blocks, b_blocks, resid = carry
+        basis, a_blocks, b_blocks, resid, breakdown = carry
         qj = basis[j]
         w = matvec(qj)  # (n, b): one batched operator application
         a = qj.T @ w
@@ -129,28 +154,39 @@ def block_lanczos(matvec: Matvec, v0: Array, num_blocks: int,
                 coeffs = flat.T @ w  # (blocks*b, b)
                 w = w - flat @ coeffs
         q_next, r_next = jnp.linalg.qr(w)
-        write = j + 1 < num_blocks
+        # breakdown guard: truncate the factorization at the first block
+        # step with a non-finite recurrence (see ``lanczos``)
+        alive = j < breakdown
+        ok = alive & jnp.all(jnp.isfinite(a)) & jnp.all(jnp.isfinite(r_next))
+        breakdown = jnp.where(alive & ~ok, j, breakdown)
+        write = jnp.logical_and(j + 1 < num_blocks, ok)
         basis = jax.lax.cond(
             write, lambda bb: bb.at[j + 1].set(q_next), lambda bb: bb, basis)
         b_blocks = jax.lax.cond(
             write, lambda bb: bb.at[j + 1].set(r_next), lambda bb: bb,
             b_blocks)
-        a_blocks = a_blocks.at[j].set(a)
-        return basis, a_blocks, b_blocks, r_next
+        a_blocks = a_blocks.at[j].set(jnp.where(ok, a, 0.0))
+        return (basis, a_blocks, b_blocks,
+                jnp.where(ok, r_next, 0.0), breakdown)
 
-    basis, a_blocks, b_blocks, resid = jax.lax.fori_loop(
+    basis, a_blocks, b_blocks, resid, breakdown = jax.lax.fori_loop(
         0, num_blocks, body,
-        (basis, a_blocks, b_blocks, jnp.zeros((b, b), dtype)))
+        (basis, a_blocks, b_blocks, jnp.zeros((b, b), dtype),
+         jnp.asarray(num_blocks, jnp.int32)))
 
     s = num_blocks * b
     t = jnp.zeros((s, s), dtype=dtype)
     for j in range(num_blocks):
         t = jax.lax.dynamic_update_slice(t, a_blocks[j], (j * b, j * b))
         if j > 0:
-            # A Q_{j-1} = ... + Q_j R_j  =>  lower block (j, j-1) is R_j
-            t = jax.lax.dynamic_update_slice(t, b_blocks[j].T, ((j - 1) * b, j * b))
-            t = jax.lax.dynamic_update_slice(t, b_blocks[j], (j * b, (j - 1) * b))
-    return BlockLanczosResult(t_matrix=t, basis=basis, residual_block=resid)
+            # A Q_{j-1} = ... + Q_j R_j  =>  lower block (j, j-1) is R_j;
+            # the coupling into the first dead block is zeroed so the
+            # sentinel-masked tail stays decoupled from the valid head
+            bj = jnp.where(j < breakdown, 1.0, 0.0) * b_blocks[j]
+            t = jax.lax.dynamic_update_slice(t, bj.T, ((j - 1) * b, j * b))
+            t = jax.lax.dynamic_update_slice(t, bj, (j * b, (j - 1) * b))
+    return BlockLanczosResult(t_matrix=t, basis=basis, residual_block=resid,
+                              breakdown_iter=breakdown)
 
 
 class EigshResult(NamedTuple):
@@ -159,6 +195,19 @@ class EigshResult(NamedTuple):
     residual_bounds: Array  # (k,) |beta_{m+1} w_m| per Ritz pair
     num_iters: int
     num_matvecs: int = 0  # operator applications (block counts as one)
+    health: EigshHealth | None = None
+
+
+def _sentinel_mask(t: Array, valid: Array, which: str) -> Array:
+    """Push the dead (breakdown-truncated, all-zero) tail of T out of the
+    requested Ritz window: its diagonal gets a sentinel far on the *wrong*
+    side of the spectrum, so argsort never selects a dead pair while shapes
+    stay static."""
+    amax = jnp.max(jnp.abs(t))
+    sentinel = (amax + 1.0) * 1e3
+    if which == "LA":
+        sentinel = -sentinel
+    return t + jnp.diag(jnp.where(valid, 0.0, sentinel))
 
 
 def eigsh(matvec: Matvec, n: int, k: int, *, num_iters: int | None = None,
@@ -203,7 +252,10 @@ def eigsh(matvec: Matvec, n: int, k: int, *, num_iters: int | None = None,
         if v0 is None:
             v0 = jax.random.normal(key, (n, block_size), dtype=dtype)
         res = block_lanczos(matvec, v0, num_blocks)
-        theta, w = jnp.linalg.eigh(res.t_matrix)
+        broke = res.breakdown_iter < num_blocks
+        valid = jnp.repeat(jnp.arange(num_blocks) < res.breakdown_iter,
+                           block_size)
+        theta, w = jnp.linalg.eigh(_sentinel_mask(res.t_matrix, valid, which))
         basis_flat = jnp.moveaxis(res.basis, 1, 0).reshape(
             n, num_blocks * block_size)
         if which == "LA":
@@ -217,20 +269,27 @@ def eigsh(matvec: Matvec, n: int, k: int, *, num_iters: int | None = None,
         vecs = basis_flat @ w_k
         bottom = w_k[-block_size:, :]  # (b, k) last-block Ritz components
         bounds = jnp.linalg.norm(res.residual_block @ bottom, axis=0)
+        bounds = jnp.where(broke, jnp.inf, bounds)
         return EigshResult(eigenvalues=theta_k, eigenvectors=vecs,
                            residual_bounds=bounds,
                            num_iters=num_blocks * block_size,
-                           num_matvecs=num_blocks)
+                           num_matvecs=num_blocks,
+                           health=EigshHealth(
+                               nonfinite=broke,
+                               breakdown_iter=res.breakdown_iter))
 
     if v0 is None:
         v0 = jax.random.normal(key, (n,), dtype=dtype)
 
     res = lanczos(matvec, v0, num_iters)
+    broke = res.breakdown_iter < num_iters
+    valid = jnp.arange(num_iters) < res.breakdown_iter
+    # dead betas (coupling into the first dead step) are zeroed so the
+    # sentinel tail stays decoupled from the valid leading block of T
+    off = jnp.where(valid[1:], res.betas[1:], 0.0)
     # T_k is (num_iters x num_iters) tridiagonal
-    t = (jnp.diag(res.alphas)
-         + jnp.diag(res.betas[1:], 1)
-         + jnp.diag(res.betas[1:], -1))
-    theta, w = jnp.linalg.eigh(t)  # ascending
+    t = jnp.diag(res.alphas) + jnp.diag(off, 1) + jnp.diag(off, -1)
+    theta, w = jnp.linalg.eigh(_sentinel_mask(t, valid, which))  # ascending
     if which == "LA":
         order = jnp.argsort(-theta)[:k]
     elif which == "SA":
@@ -241,9 +300,12 @@ def eigsh(matvec: Matvec, n: int, k: int, *, num_iters: int | None = None,
     w_k = w[:, order]
     vecs = res.basis.T @ w_k  # (n, k)
     bounds = jnp.abs(res.residual_beta * w_k[-1, :])
+    bounds = jnp.where(broke, jnp.inf, bounds)
     return EigshResult(eigenvalues=theta_k, eigenvectors=vecs,
                        residual_bounds=bounds, num_iters=num_iters,
-                       num_matvecs=num_iters)
+                       num_matvecs=num_iters,
+                       health=EigshHealth(nonfinite=broke,
+                                          breakdown_iter=res.breakdown_iter))
 
 
 def eigsh_smallest_laplacian(adjacency_matvec: Matvec, n: int, k: int,
@@ -257,4 +319,5 @@ def eigsh_smallest_laplacian(adjacency_matvec: Matvec, n: int, k: int,
                        eigenvectors=res.eigenvectors,
                        residual_bounds=res.residual_bounds,
                        num_iters=res.num_iters,
-                       num_matvecs=res.num_matvecs)
+                       num_matvecs=res.num_matvecs,
+                       health=res.health)

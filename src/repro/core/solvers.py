@@ -27,6 +27,18 @@ All solvers recompute the true residual ``||b - A x||`` (per column) at
 exit: the recurrence residual drifts on ill-conditioned operators, so the
 reported ``residual_norm`` / ``converged`` always describe the returned
 iterate.
+
+Guarded execution (``repro.runtime``): every solve also reports a
+:class:`SolveHealth`.  A non-finite right-hand-side column is quarantined
+*before* the loop (the solve returns immediately for it instead of
+spinning to ``maxiter`` on NaNs); a column whose iterate goes non-finite
+mid-solve — e.g. a poisoned operator member in a bank — is reverted to its
+last finite iterate and frozen via the same per-column masks that freeze
+converged columns, so one bad system can neither hang nor pollute its
+lockstep siblings; a column whose residual stops improving for
+``stall_window`` consecutive iterations is frozen as stagnated (Krylov
+breakdown under inexact matvecs — the attainable-accuracy wall — no longer
+burns the full ``maxiter`` budget).
 """
 
 from __future__ import annotations
@@ -39,12 +51,44 @@ import jax.numpy as jnp
 Array = jax.Array
 Matvec = Callable[[Array], Array]
 
+# A column "improves" only when its residual beats its best-so-far by this
+# relative margin; anything smaller feeds the stagnation counter.  Cumulative
+# over the window, so a legitimately (if slowly) converging column resets
+# the counter long before a default window expires.
+_STALL_RTOL = 1e-3
+
+
+class SolveHealth(NamedTuple):
+    """Per-column solver guard flags (shapes mirror ``converged``).
+
+    ``rhs_nonfinite``
+        the right-hand side (or ``x0``) held NaN/Inf; the column was
+        quarantined before the first iteration and ``x`` is 0 for it.
+    ``nonfinite``
+        the iterate went non-finite mid-solve (poisoned operator,
+        breakdown); ``x`` is the last finite iterate.
+    ``stagnated``
+        the residual stopped improving for ``stall_window`` iterations.
+    ``breakdown_iter``
+        iteration index at which ``nonfinite`` tripped, -1 if never.
+    """
+
+    rhs_nonfinite: Array
+    nonfinite: Array
+    stagnated: Array
+    breakdown_iter: Array
+
+    @property
+    def any_fault(self) -> Array:
+        return self.rhs_nonfinite | self.nonfinite | self.stagnated
+
 
 class SolveResult(NamedTuple):
     x: Array
     num_iters: Array
     residual_norm: Array
     converged: Array
+    health: SolveHealth | None = None
 
 
 def _col_norms(v: Array) -> Array:
@@ -76,22 +120,69 @@ def _as_columns(matvec: Matvec, b: Array, x0: Array | None,
 def _squeeze_result(res: SolveResult, batched: bool) -> SolveResult:
     if batched:
         return res
+    health = None if res.health is None else \
+        SolveHealth(*(f[0] for f in res.health))
     return SolveResult(x=res.x[:, 0], num_iters=res.num_iters[0],
                        residual_norm=res.residual_norm[0],
-                       converged=res.converged[0])
+                       converged=res.converged[0], health=health)
+
+
+def _validate_rhs(b: Array, x0: Array | None):
+    """Quarantine non-finite rhs / x0 columns before the loop.
+
+    Returns ``(rhs_bad (C,), b_safe, x0_safe)`` — bad columns get a zero
+    rhs (and zero start), so their residual is 0 from iteration 0 and they
+    never enter the active set: an all-NaN ``b`` exits immediately with
+    ``num_iters == 0`` instead of spinning to ``maxiter``.
+    """
+    rhs_bad = ~jnp.all(jnp.isfinite(b), axis=0)  # (C,)
+    if x0 is not None:
+        rhs_bad = rhs_bad | ~jnp.all(jnp.isfinite(x0), axis=0)
+        x0 = jnp.where(rhs_bad[None, :], 0.0, x0)
+    b_safe = jnp.where(rhs_bad[None, :], 0.0, b)
+    return rhs_bad, b_safe, x0
+
+
+def _finish(matvec: Matvec, b_safe: Array, x: Array, tol_abs: Array,
+            iters: Array, rhs_bad: Array, poisoned: Array, stalled: Array,
+            bad_iter: Array, batched: bool) -> SolveResult:
+    """Shared exit path: true residual + health assembly.
+
+    The recurrence residual drifts from ``b - A x`` on ill-conditioned
+    operators (finite-precision rounding breaks the exact update
+    invariant), so one extra matvec recomputes the true residual at exit —
+    ``residual_norm`` / ``converged`` always describe the returned iterate.
+    Quarantined-rhs columns report ``inf`` (deterministic, not NaN).
+    """
+    res = _col_norms(b_safe - matvec(x))
+    # a poisoned operator column emits NaN even on the reverted (finite)
+    # iterate; normalize any non-finite exit residual to inf so downstream
+    # comparisons are deterministic
+    res = jnp.where(rhs_bad | ~jnp.isfinite(res), jnp.inf, res)
+    health = SolveHealth(rhs_nonfinite=rhs_bad, nonfinite=poisoned,
+                         stagnated=stalled, breakdown_iter=bad_iter)
+    return _squeeze_result(
+        SolveResult(x=x, num_iters=iters, residual_norm=res,
+                    converged=res <= tol_abs, health=health), batched)
 
 
 def cg(matvec: Matvec, b: Array, *, x0: Array | None = None,
        tol: float = 1e-8, maxiter: int = 1000,
-       preconditioner: Matvec | None = None) -> SolveResult:
+       preconditioner: Matvec | None = None,
+       stall_window: int = 250) -> SolveResult:
     """Preconditioned conjugate gradients for SPD operators.
 
     ``b`` (n,): scalar recurrence, scalar result fields.  ``b`` (n, C):
     per-column recurrences in lockstep (see module docstring); ``x``
     (n, C) and ``num_iters`` / ``residual_norm`` / ``converged`` (C,).
+
+    ``stall_window`` > 0 freezes a column whose residual fails to improve
+    (by a relative ``1e-3``) for that many consecutive iterations; 0
+    disables stagnation detection.  Guard flags land in ``result.health``.
     """
     matvec, b, x0, preconditioner, batched = _as_columns(
         matvec, b, x0, preconditioner)
+    rhs_bad, b, x0 = _validate_rhs(b, x0)
     if x0 is None:
         # r0 = b - A·0 = b: skipping the matvec drops one of three copies
         # of the operator graph from the trace (faster compile, same math)
@@ -101,53 +192,85 @@ def cg(matvec: Matvec, b: Array, *, x0: Array | None = None,
     z = preconditioner(r) if preconditioner is not None else r
     p = z
     rz = _col_dot(r, z)  # (C,)
+    resn0 = _col_norms(r)
     tol_abs = tol * jnp.maximum(_col_norms(b), 1.0)  # (C,)
-    iters0 = jnp.zeros(b.shape[1:], jnp.int32)
+    cshape = tol_abs.shape
+    iters0 = jnp.zeros(cshape, jnp.int32)
+    guards0 = (resn0,  # best residual so far
+               jnp.zeros(cshape, jnp.int32),   # stall counter
+               jnp.zeros(cshape, bool),        # poisoned (non-finite)
+               jnp.zeros(cshape, bool),        # stagnated
+               jnp.full(cshape, -1, jnp.int32))  # breakdown_iter
 
     def cond(state):
-        x, r, z, p, rz, iters, i = state
-        return jnp.logical_and(i < maxiter,
-                               jnp.any(_col_norms(r) > tol_abs))
+        x, r, z, p, rz, iters, (best, stall, poisoned, stalled, bad), i = \
+            state
+        alive = (_col_norms(r) > tol_abs) & ~poisoned & ~stalled
+        return jnp.logical_and(i < maxiter, jnp.any(alive))
 
     def body(state):
-        x, r, z, p, rz, iters, i = state
-        active = _col_norms(r) > tol_abs  # (C,)
+        x, r, z, p, rz, iters, (best, stall, poisoned, stalled, bad), i = \
+            state
+        active = (_col_norms(r) > tol_abs) & ~poisoned & ~stalled  # (C,)
         ap = matvec(p)
         denom = _col_dot(p, ap)
         alpha = rz / jnp.where(denom != 0, denom, 1.0)
-        # freeze converged columns: zero step keeps x, r (and hence the
-        # active mask) fixed while the remaining columns keep iterating
         alpha = jnp.where(active, alpha, 0.0)
-        x = x + alpha * p
-        r = r - alpha * ap
-        z_new = preconditioner(r) if preconditioner is not None else r
-        rz_new = _col_dot(r, z_new)
+        x_new = x + alpha * p
+        r_new = r - alpha * ap
+        z_new = preconditioner(r_new) if preconditioner is not None else r_new
+        rz_new = _col_dot(r_new, z_new)
         beta = jnp.where(active, rz_new / jnp.where(rz != 0, rz, 1.0), 0.0)
-        p = z_new + beta * p
-        return x, r, z_new, p, rz_new, iters + active, i + 1
+        p_new = z_new + beta * p
 
-    x, r, z, p, rz, iters, _ = jax.lax.while_loop(
-        cond, body, (x, r, z, p, rz, iters0, jnp.zeros((), jnp.int32)))
-    # The recurrence residual r drifts from b - A x on ill-conditioned
-    # operators (finite-precision rounding breaks the exact update
-    # invariant), so the loop can report convergence the iterate doesn't
-    # have.  One extra matvec recomputes the true residual at exit so
-    # residual_norm / converged reflect the returned x.
-    res = _col_norms(b - matvec(x))
-    return _squeeze_result(
-        SolveResult(x=x, num_iters=iters, residual_norm=res,
-                    converged=res <= tol_abs), batched)
+        # quarantine: a column whose update went non-finite reverts to its
+        # last finite iterate and leaves the active set for good — frozen
+        # columns never take (or emit) NaN values, so lockstep siblings
+        # are untouched
+        ok = (jnp.all(jnp.isfinite(x_new), axis=0)
+              & jnp.all(jnp.isfinite(r_new), axis=0)
+              & jnp.all(jnp.isfinite(p_new), axis=0))
+        upd = active & ok
+        trip = active & ~ok
+        poisoned = poisoned | trip
+        bad = jnp.where(trip & (bad < 0), i, bad)
+        sel = lambda new, old: jnp.where(upd[None, :], new, old)
+        x, r, z, p = (sel(x_new, x), sel(r_new, r), sel(z_new, z),
+                      sel(p_new, p))
+        rz = jnp.where(upd, rz_new, rz)
+
+        # stagnation: no relative improvement over the best residual for
+        # stall_window consecutive iterations -> freeze the column
+        resn = _col_norms(r)
+        improved = resn < best * (1.0 - _STALL_RTOL)
+        best = jnp.minimum(best, resn)
+        stall = jnp.where(upd & ~improved, stall + 1, 0)
+        if stall_window:
+            stalled = stalled | (stall >= stall_window)
+        return (x, r, z, p, rz, iters + active,
+                (best, stall, poisoned, stalled, bad), i + 1)
+
+    x, r, z, p, rz, iters, (best, stall, poisoned, stalled, bad), _ = \
+        jax.lax.while_loop(cond, body, (x, r, z, p, rz, iters0, guards0,
+                                        jnp.zeros((), jnp.int32)))
+    return _finish(matvec, b, x, tol_abs, iters, rhs_bad, poisoned,
+                   stalled, bad, batched)
 
 
 def minres(matvec: Matvec, b: Array, *, x0: Array | None = None,
-           tol: float = 1e-8, maxiter: int = 1000) -> SolveResult:
+           tol: float = 1e-8, maxiter: int = 1000,
+           stall_window: int = 250) -> SolveResult:
     """MINRES for symmetric (possibly indefinite) operators.
 
     Batched ``b`` (n, C) runs per-column Lanczos + Givens recurrences in
-    lockstep (all scalar recurrence state becomes (C,)-shaped); converged
-    columns stop updating their iterate while the rest continue.
+    lockstep (all scalar recurrence state becomes (C,)-shaped); a frozen
+    column — converged, poisoned, or stagnated — stops updating its whole
+    recurrence (iterate *and* Lanczos state), so a non-finite column can
+    never leak into its siblings.  Guard flags land in ``result.health``;
+    ``stall_window=0`` disables stagnation detection.
     """
     matvec, b, x0, _, batched = _as_columns(matvec, b, x0, None)
+    rhs_bad, b, x0 = _validate_rhs(b, x0)
     if x0 is None:
         x, r = jnp.zeros_like(b), b  # r0 = b - A·0 (matvec elided)
     else:
@@ -171,16 +294,22 @@ def minres(matvec: Matvec, b: Array, *, x0: Array | None = None,
     sn = jnp.zeros(cshape, dtype)
     beta = beta1
     iters0 = jnp.zeros(cshape, jnp.int32)
+    guards0 = (beta1,  # best |phi_bar| so far
+               jnp.zeros(cshape, jnp.int32),   # stall counter
+               jnp.zeros(cshape, bool),        # poisoned (non-finite)
+               jnp.zeros(cshape, bool),        # stagnated
+               jnp.full(cshape, -1, jnp.int32))  # breakdown_iter
 
     def cond(state):
         (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta,
-         iters, i) = state
-        return jnp.logical_and(i < maxiter, jnp.any(jnp.abs(phi_bar) > tol_abs))
+         iters, (best, stall, poisoned, stalled, bad), i) = state
+        alive = (jnp.abs(phi_bar) > tol_abs) & ~poisoned & ~stalled
+        return jnp.logical_and(i < maxiter, jnp.any(alive))
 
     def body(state):
         (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta,
-         iters, i) = state
-        active = jnp.abs(phi_bar) > tol_abs  # (C,)
+         iters, (best, stall, poisoned, stalled, bad), i) = state
+        active = (jnp.abs(phi_bar) > tol_abs) & ~poisoned & ~stalled  # (C,)
         av = matvec(v)
         alpha = _col_dot(v, av).astype(dtype)
         av = av - alpha * v - beta * v_prev
@@ -199,26 +328,48 @@ def minres(matvec: Matvec, b: Array, *, x0: Array | None = None,
         cs_new = gamma1 / gamma2
         sn_new = beta_new / gamma2
         tau = cs_new * phi_bar
-        phi_bar_new = jnp.where(active, sn_new * phi_bar, phi_bar)
+        phi_bar_new = sn_new * phi_bar
 
         w_new = (v - delta2 * w - eps_k * w_prev) / gamma2
-        # converged columns take a zero step (their Lanczos recurrence keeps
-        # running harmlessly; only the iterate and phi_bar are frozen)
-        x_new = x + jnp.where(active, tau, 0.0) * w_new
-        return (x_new, v_new, v, w_new, w, phi_bar_new, delta1_next,
-                eps_next, cs_new, sn_new, beta_new, iters + active, i + 1)
+        x_new = x + tau * w_new
+
+        # per-column freeze: only columns that are active AND whose update
+        # stayed finite take the step — everything else (converged,
+        # poisoned, stagnated, or tripping this iteration) keeps its whole
+        # recurrence state, so NaNs never enter the carried arrays
+        ok = (jnp.all(jnp.isfinite(x_new), axis=0)
+              & jnp.all(jnp.isfinite(v_new), axis=0)
+              & jnp.isfinite(phi_bar_new))
+        upd = active & ok
+        trip = active & ~ok
+        poisoned = poisoned | trip
+        bad = jnp.where(trip & (bad < 0), i, bad)
+        seln = lambda new, old: jnp.where(upd[None, :], new, old)
+        selc = lambda new, old: jnp.where(upd, new, old)
+        x2, v2, vp2 = seln(x_new, x), seln(v_new, v), seln(v, v_prev)
+        w2, wp2 = seln(w_new, w), seln(w, w_prev)
+        phi_bar = selc(phi_bar_new, phi_bar)
+        delta1, eps_k = selc(delta1_next, delta1), selc(eps_next, eps_k)
+        cs, sn = selc(cs_new, cs), selc(sn_new, sn)
+        beta = selc(beta_new, beta)
+
+        # stagnation on the QR-recurrence residual |phi_bar|
+        resn = jnp.abs(phi_bar)
+        improved = resn < best * (1.0 - _STALL_RTOL)
+        best = jnp.minimum(best, resn)
+        stall = jnp.where(upd & ~improved, stall + 1, 0)
+        if stall_window:
+            stalled = stalled | (stall >= stall_window)
+        return (x2, v2, vp2, w2, wp2, phi_bar, delta1, eps_k, cs, sn, beta,
+                iters + active, (best, stall, poisoned, stalled, bad), i + 1)
 
     init = (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta,
-            iters0, jnp.zeros((), jnp.int32))
+            iters0, guards0, jnp.zeros((), jnp.int32))
     (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta, iters,
-     _) = jax.lax.while_loop(cond, body, init)
-    # |phi_bar| is the QR-recurrence residual; like CG's it drifts from
-    # ||b - A x|| in finite precision.  Recompute the true residual once at
-    # exit (one matvec) so the reported norm matches the returned iterate.
-    res = _col_norms(b - matvec(x))
-    return _squeeze_result(
-        SolveResult(x=x, num_iters=iters, residual_norm=res,
-                    converged=res <= tol_abs), batched)
+     (best, stall, poisoned, stalled, bad), _) = jax.lax.while_loop(
+        cond, body, init)
+    return _finish(matvec, b, x, tol_abs, iters, rhs_bad, poisoned,
+                   stalled, bad, batched)
 
 
 # ---------------------------------------------------------------------------
@@ -258,27 +409,35 @@ def _bank_solve(solver, bank_matvec: Matvec, b: Array, x0: Array | None,
     x = from_flat(sol.x)
     stats = [a.reshape(s, c) for a in
              (sol.num_iters, sol.residual_norm, sol.converged)]
+    health = SolveHealth(*(a.reshape(s, c) for a in sol.health))
     if squeeze:
         x = x[..., 0]
         stats = [a[:, 0] for a in stats]
-    return SolveResult(x, *stats)
+        health = SolveHealth(*(a[:, 0] for a in health))
+    return SolveResult(x, *stats, health=health)
 
 
 def cg_bank(bank_matvec: Matvec, b: Array, *, x0: Array | None = None,
-            tol: float = 1e-8, maxiter: int = 1000) -> SolveResult:
+            tol: float = 1e-8, maxiter: int = 1000,
+            stall_window: int = 250) -> SolveResult:
     """Lockstep CG over a bank axis: b (S, n) or (S, n, C).
 
     One bank matvec per iteration solves all S·C systems; per-system
     tolerance masks freeze converged systems; the true residual is
     recomputed at exit.  Result fields mirror the input layout: ``x``
-    (S, n[, C]), ``num_iters``/``residual_norm``/``converged`` (S[, C]).
+    (S, n[, C]), ``num_iters``/``residual_norm``/``converged`` (S[, C]),
+    and ``health`` fields likewise (S[, C]) — a poisoned tenant's system
+    is quarantined without touching its bank siblings.
     """
     return _bank_solve(cg, bank_matvec, b, x0,
-                       dict(tol=tol, maxiter=maxiter))
+                       dict(tol=tol, maxiter=maxiter,
+                            stall_window=stall_window))
 
 
 def minres_bank(bank_matvec: Matvec, b: Array, *, x0: Array | None = None,
-                tol: float = 1e-8, maxiter: int = 1000) -> SolveResult:
+                tol: float = 1e-8, maxiter: int = 1000,
+                stall_window: int = 250) -> SolveResult:
     """Lockstep MINRES over a bank axis (see :func:`cg_bank`)."""
     return _bank_solve(minres, bank_matvec, b, x0,
-                       dict(tol=tol, maxiter=maxiter))
+                       dict(tol=tol, maxiter=maxiter,
+                            stall_window=stall_window))

@@ -37,6 +37,7 @@ psum); it survives only as an oracle.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -173,6 +174,25 @@ def resolve_pencil_spec(plan: NfftPlan, mesh, axes, pencil_axes=None):
     return None if spec.row_size * spec.col_size == 1 else spec
 
 
+# One warning per process when a *requested* pencil mode degenerates: the
+# silent psum substitution is correct (same math, one collective) but the
+# scaling profile the caller asked for is not what runs — say so once.
+_PENCIL_FALLBACK_WARNED = [False]
+
+
+def _note_pencil_fallback(plan: NfftPlan, mesh) -> None:
+    if _PENCIL_FALLBACK_WARNED[0]:
+        return
+    _PENCIL_FALLBACK_WARNED[0] = True
+    warnings.warn(
+        f"spectral_mode='pencil' degenerates on this configuration "
+        f"(d={plan.d}, grid={plan.grid_size}, mesh shape "
+        f"{dict(mesh.shape)}): no mesh axis divides the grid into pencils; "
+        "degrading to the support-block psum path (same result, "
+        "replicated-spectrum scaling)",
+        RuntimeWarning, stacklevel=3)
+
+
 def make_sharded_matvec(plan: NfftPlan, mesh, axes, *,
                         spectral_mode: str = "psum",
                         backend: str | None = None, pencil_axes=None,
@@ -193,6 +213,8 @@ def make_sharded_matvec(plan: NfftPlan, mesh, axes, *,
     spec = None
     if spectral_mode == "pencil":
         spec = resolve_pencil_spec(plan, mesh, axes, pencil_axes)
+        if spec is None:
+            _note_pencil_fallback(plan, mesh)
 
     @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P(), P(axes, None), P(axes, None, None),
@@ -240,6 +262,8 @@ def make_sharded_matvec_bank(plan: NfftPlan, mesh, axes, *,
     spec = None
     if spectral_mode == "pencil":
         spec = resolve_pencil_spec(plan, mesh, axes, pencil_axes)
+        if spec is None:
+            _note_pencil_fallback(plan, mesh)
     x_spec = P(None, axes, None) if lockstep else P(axes, None)
 
     @functools.partial(shard_map, mesh=mesh,

@@ -230,7 +230,8 @@ def run_graph_cell(n_nodes: int, d: int, multi_pod: bool, *,
 
 
 def run_graph_serve_cell(slots: int, chunk: int, d: int, multi_pod: bool, *,
-                         setup_name: str = "setup2", mesh=None) -> dict:
+                         setup_name: str = "setup2", mesh=None,
+                         guarded: bool = True) -> dict:
     """Lower the graph-predict serve tick body at cluster scale.
 
     The tick body of :class:`repro.serving.GraphServeEngine` — the packed
@@ -240,6 +241,13 @@ def run_graph_serve_cell(slots: int, chunk: int, d: int, multi_pod: bool, *,
     the serving tier (grids are cache-resident, nothing replans).  Query
     rows shard across the mesh; the grid stack is replicated (it is
     O(M^d * slots), small next to node data).
+
+    ``guarded=True`` (default) fuses the engine's runtime guard into the
+    lowered body: a per-row validity mask (finite query, inside the torus
+    fundamental domain, finite gathered output) rides out alongside the
+    predictions, so the host retires poisoned rows without a second device
+    pass — the cell proves the guard lowers to elementwise ops with no
+    extra collective.
     """
     from repro.core import fastsum_exec
     from repro.core import nfft as nfft_mod
@@ -261,13 +269,21 @@ def run_graph_serve_cell(slots: int, chunk: int, d: int, multi_pod: bool, *,
         "shape": f"slots{slots}x{chunk}",
         "mesh": "x".join(map(str, mesh.shape.values())),
         "chips": chips, "kind": "graph_serve_tick",
-        "rows": m_pack, "channels": slots,
+        "rows": m_pack, "channels": slots, "guarded": guarded,
     }
     try:
         def tick(points, grid, col_index):
             tgt = nfft_mod.build_window_geometry(plan, points)
-            return fastsum_exec.fused_gather_columns(
+            out = fastsum_exec.fused_gather_columns(
                 plan, tgt, grid, col_index)
+            if not guarded:
+                return out
+            # fused runtime guard: out-of-domain / non-finite rows flagged
+            # on-device (elementwise only — no collective, no extra pass)
+            ok = (jnp.all(jnp.isfinite(points), axis=1)
+                  & jnp.all(jnp.abs(points) < 0.5, axis=1)
+                  & jnp.isfinite(out))
+            return jnp.where(ok, out, 0.0), ok
 
         pts = jax.ShapeDtypeStruct((m_pack, d), jnp.float32)
         grid_s = jax.ShapeDtypeStruct((plan.grid_size,) * d + (slots,),
@@ -275,7 +291,8 @@ def run_graph_serve_cell(slots: int, chunk: int, d: int, multi_pod: bool, *,
         ci = jax.ShapeDtypeStruct((m_pack,), jnp.int32)
         in_sh = (named(mesh, P(axes, None)), named(mesh, P()),
                  named(mesh, P(axes)))
-        out_sh = named(mesh, P(axes))
+        out_sh = (named(mesh, P(axes)), named(mesh, P(axes))) \
+            if guarded else named(mesh, P(axes))
         t0 = time.perf_counter()
         lowered = jax.jit(tick, in_shardings=in_sh,
                           out_shardings=out_sh).lower(pts, grid_s, ci)

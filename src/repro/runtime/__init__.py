@@ -1,0 +1,35 @@
+"""Guarded execution: runtime accuracy guards + deterministic fault injection.
+
+``repro.runtime`` is the layer that makes the fast paths *safe to trust* in
+production: the paper's Lemma 3.1 a-posteriori error bound consulted live
+(with automatic bandwidth escalation and a dense-fallback floor), and
+seeded chaos injectors for driving the solve/serve stack through failures
+in tests.  See ``guards`` and ``faultinject``.
+"""
+
+from repro.runtime.faultinject import (
+    TickChaos, chaos_schedule, corrupt_group_plan, nan_poison_grid,
+    poison_bank_member, poison_columns, poison_registry_grids, SlowMatvec,
+)
+from repro.runtime.guards import (
+    DirectKernelOperator, GuardPolicy, GuardReport, ProbeReport,
+    guarded_fastsum, guarded_normalized_adjacency, probe_fastsum,
+)
+
+__all__ = [
+    "DirectKernelOperator",
+    "GuardPolicy",
+    "GuardReport",
+    "ProbeReport",
+    "SlowMatvec",
+    "TickChaos",
+    "chaos_schedule",
+    "corrupt_group_plan",
+    "guarded_fastsum",
+    "guarded_normalized_adjacency",
+    "nan_poison_grid",
+    "poison_bank_member",
+    "poison_columns",
+    "poison_registry_grids",
+    "probe_fastsum",
+]

@@ -1,0 +1,190 @@
+"""Deterministic fault injection for the solve + serve paths.
+
+Chaos testing needs faults that are *seeded and reproducible* — a flaky
+injector makes a flaky test.  Everything here is deterministic given its
+arguments:
+
+* solver-side injectors wrap a matvec so chosen columns (or bank members)
+  always emit NaN — the execution shape of a poisoned spectral multiplier,
+  whose every matvec is non-finite.  (Injectors must be trace-safe: a
+  ``lax.while_loop`` body executes compiled, so Python-side call counting
+  cannot gate a fault per iteration; data-independent poisoning can.)
+
+* serving-side injectors mutate a :class:`~repro.serving.graph.
+  GraphModelRegistry` white-box style (NaN-poisoned cached grids, corrupted
+  prediction plans), and :class:`TickChaos` schedules drops / delays /
+  poisonings per engine tick via the ``GraphServeEngine(chaos=...)`` hook.
+
+The chaos test suite (``pytest -m chaos``) drives the engine and the bank
+solvers through these and asserts recovery, isolation, and counters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Solver-side injectors
+# ---------------------------------------------------------------------------
+
+def poison_columns(matvec: Callable, columns) -> Callable:
+    """Wrap an (n, C) -> (n, C) matvec so ``columns`` always emit NaN.
+
+    Models a poisoned per-column operator in a lockstep solve; the guarded
+    solvers must quarantine exactly these columns (``health.nonfinite``)
+    while the siblings converge untouched.
+    """
+    cols = jnp.asarray(tuple(columns), jnp.int32)
+
+    def wrapped(x):
+        y = matvec(x)
+        return y.at[:, cols].set(jnp.nan)
+
+    return wrapped
+
+
+def poison_bank_member(bank_matvec: Callable, members) -> Callable:
+    """Wrap an (S, n, C) -> (S, n, C) bank matvec so ``members`` emit NaN.
+
+    One bad tenant's operator in an ``cg_bank``/``minres_bank`` sweep: all
+    its columns must be quarantined without touching sibling systems.
+    """
+    mem = jnp.asarray(tuple(members), jnp.int32)
+
+    def wrapped(xb):
+        yb = bank_matvec(xb)
+        return yb.at[mem].set(jnp.nan)
+
+    return wrapped
+
+
+@dataclasses.dataclass
+class SlowMatvec:
+    """Host-side matvec delay + call counter (straggler injection)."""
+
+    inner: Callable
+    delay_s: float = 0.0
+    calls: int = 0
+
+    def __call__(self, x):
+        self.calls += 1
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        return self.inner(x)
+
+
+# ---------------------------------------------------------------------------
+# Grid / plan injectors (serving registry, white-box)
+# ---------------------------------------------------------------------------
+
+def nan_poison_grid(grid: Array, *, frac: float = 0.02,
+                    seed: int = 0) -> Array:
+    """NaN a seeded random subset of grid entries (memory-corruption model)."""
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray(rng.random(grid.shape) < frac)
+    return jnp.where(mask, jnp.nan, grid)
+
+
+def poison_registry_grids(registry, model_id: str, *, frac: float = 0.02,
+                          seed: int = 0) -> int:
+    """NaN-poison every cached transformed grid of ``model_id`` in place.
+
+    Returns the number of grids poisoned.  The engine's non-finite output
+    guard must fail affected requests, trip the model's circuit breaker,
+    and invalidate the poisoned grids so later requests rebuild clean ones
+    from the (uncorrupted) dual vectors.
+    """
+    group = registry.group_of(model_id)
+    if group is None:
+        return 0
+    poisoned = 0
+    with registry._lock:
+        for key in list(group.grids):
+            if key[0] == model_id:
+                group.grids[key] = nan_poison_grid(
+                    group.grids[key], frac=frac, seed=seed + poisoned)
+                poisoned += 1
+    return poisoned
+
+
+def corrupt_group_plan(registry, model_id: str, *,
+                       shift_by: float = 10.0) -> bool:
+    """Corrupt ``model_id``'s frozen PredictionPlan in place.
+
+    Translates the plan's ``shift`` AND its scaled source set out of the
+    admissible ball — the memory-corruption model for the plan object.  The
+    corruption is *detectable*: the plan's own sources violate the
+    admissibility invariant, which the engine checks when an admission
+    starts failing, and recoverable: ``registry.rebuild_group`` rebuilds
+    the plan from the registered models.
+    """
+    group = registry.group_of(model_id)
+    if group is None:
+        return False
+    with registry._lock:
+        pred = group.pred
+        bad_src = pred.scaled_src + 2.0 * pred.radius
+        group.pred = dataclasses.replace(
+            pred, shift=pred.shift + shift_by, scaled_src=bad_src)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Engine tick chaos
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TickChaos:
+    """Seeded per-tick fault schedule for ``GraphServeEngine(chaos=...)``.
+
+    The engine calls :meth:`apply` at the top of every tick; a True return
+    drops the tick entirely (requests wait — recovery is later ticks plus
+    deadline eviction).  ``slow_ticks`` injects host-side delay;
+    ``poison_grids`` / ``corrupt_plans`` fire the registry injectors above
+    at the scheduled tick.
+    """
+
+    drop_ticks: frozenset = frozenset()
+    slow_ticks: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    poison_grids: Mapping[int, str] = dataclasses.field(default_factory=dict)
+    corrupt_plans: Mapping[int, str] = dataclasses.field(default_factory=dict)
+    seed: int = 0
+
+    def apply(self, engine, tick: int) -> bool:
+        delay = self.slow_ticks.get(tick)
+        if delay:
+            time.sleep(delay)
+        model_id = self.poison_grids.get(tick)
+        if model_id is not None:
+            poison_registry_grids(engine.registry, model_id, seed=self.seed)
+        model_id = self.corrupt_plans.get(tick)
+        if model_id is not None:
+            corrupt_group_plan(engine.registry, model_id)
+        return tick in self.drop_ticks
+
+
+def chaos_schedule(seed: int, *, ticks: int, models=(),
+                   p_drop: float = 0.05, p_slow: float = 0.05,
+                   slow_s: float = 0.002, p_poison: float = 0.0) -> TickChaos:
+    """A seeded random TickChaos over ``ticks`` engine ticks."""
+    rng = np.random.default_rng(seed)
+    drops, slows, poisons = set(), {}, {}
+    for t in range(ticks):
+        r = rng.random()
+        if r < p_drop:
+            drops.add(t)
+        elif r < p_drop + p_slow:
+            slows[t] = slow_s
+        elif models and r < p_drop + p_slow + p_poison:
+            poisons[t] = models[int(rng.integers(len(models)))]
+    return TickChaos(drop_ticks=frozenset(drops), slow_ticks=slows,
+                     poison_grids=poisons, seed=seed)

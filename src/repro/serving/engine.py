@@ -36,11 +36,13 @@ class Request:
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None
 
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
-                 max_seq: int = 256, greedy: bool = True):
+                 max_seq: int = 256, greedy: bool = True,
+                 max_queue: Optional[int] = None):
         assert cfg.frontend == "none", "engine serves token-only archs"
         self.cfg, self.params = cfg, params
         self.slots, self.max_seq = slots, max_seq
@@ -48,8 +50,13 @@ class ServeEngine:
         self.pos = np.zeros((slots,), np.int32)
         self.active: list[Optional[Request]] = [None] * slots
         self.last_token = np.zeros((slots, 1), np.int32)
-        self.queue: "queue.Queue[Request]" = queue.Queue()
+        # max_queue bounds admission: submit rejects with backpressure
+        # instead of growing the queue without limit (mirrors
+        # serving.graph.GraphServeEngine)
+        self.queue: "queue.Queue[Request]" = \
+            queue.Queue(maxsize=max_queue or 0)
         self.greedy = greedy
+        self.backpressure_rejections = 0
 
         self._decode = jax.jit(
             lambda p, t, q, c: M.forward_decode(p, cfg, t, q, c))
@@ -115,8 +122,17 @@ class ServeEngine:
         return int(jnp.argmax(logits, axis=-1)[0])
 
     # -- public -------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self.queue.put(req)
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request; False (request failed immediately) when the
+        bounded queue is full — backpressure instead of unbounded growth."""
+        try:
+            self.queue.put_nowait(req)
+        except queue.Full:
+            req.error = "queue full (backpressure)"
+            req.done = True
+            self.backpressure_rejections += 1
+            return False
+        return True
 
     def step(self) -> int:
         """One engine tick: admit waiting requests, one decode step for the

@@ -36,6 +36,17 @@ cache hits; the engine records per-tick queue depth, slot occupancy, and
 rows served (:class:`TickStats`) — the counters the serving benchmark's
 numbers are explained with, and the ones the zero-replan regression test
 asserts on.
+
+Guarded execution (``guards=True``, default): per-request deadlines with
+slot-recycling eviction, bounded-queue admission with backpressure
+rejection, out-of-domain query handling (reject, or re-plan through the
+exact :func:`~repro.graph.krr.krr_predict` slow path — never a silently
+wrong torus wraparound), a non-finite output guard, plan-invariant
+validation with automatic group rebuild, and a per-tenant circuit breaker
+that trips on repeated failures, invalidates the tenant's cached grids
+(the poisoned-state recovery path), and sheds that tenant's load for a
+cooldown.  Deterministic fault injection hooks in via
+``GraphServeEngine(chaos=...)`` (see :mod:`repro.runtime.faultinject`).
 """
 
 from __future__ import annotations
@@ -55,7 +66,7 @@ from repro.core import fastsum_exec
 from repro.core.fastsum import (
     PredictionPlan, make_prediction_plan, prediction_multiplier,
 )
-from repro.graph.krr import KRRModel, points_fingerprint
+from repro.graph.krr import KRRModel, krr_predict, points_fingerprint
 
 Array = jax.Array
 
@@ -74,6 +85,7 @@ class PredictRequest:
     model_id: str
     query_points: np.ndarray  # (m, d)
     rhs: Optional[np.ndarray] = None
+    deadline_s: Optional[float] = None  # relative to submit; None = none
     # filled by the engine:
     output: Optional[np.ndarray] = None  # (m,) predictions
     done: bool = False
@@ -98,6 +110,12 @@ class TickStats:
     grid_hits: int  # columns served from the grid cache
     finished: int  # requests retired this tick
     seconds: float
+    # guard counters (0 / False on a healthy tick):
+    evicted: int = 0  # deadline-expired requests evicted (slot recycled)
+    out_of_domain: int = 0  # inadmissible queries rejected or re-planned
+    nonfinite: int = 0  # requests failed by the non-finite output guard
+    rebuilds: int = 0  # corrupted-plan group rebuilds triggered
+    dropped: bool = False  # tick dropped by fault injection
 
 
 @dataclasses.dataclass
@@ -111,6 +129,8 @@ class _TenantGroup:
 
     def __init__(self, pred: PredictionPlan, grid_cache_slots: int):
         self.pred = pred
+        self.gkey: Optional[tuple] = None  # registry group key
+        self.domain_args: tuple = (None, 0.5)  # (domain_points, margin)
         self.entries: dict[str, _ModelEntry] = {}
         self.multipliers: list[Array] = []  # one folded half-spectrum each
         self.mult_stack: Optional[Array] = None  # (S,) + half-spectrum
@@ -154,6 +174,8 @@ class GraphModelRegistry:
             "grid_builds": 0,        # (model, rhs) transform-to-grid runs
             "grid_hits": 0,          # columns served from the grid cache
             "bank_transforms": 0,    # fused_transform_columns invocations
+            "grid_invalidations": 0,  # cached grids dropped by the guards
+            "group_rebuilds": 0,     # corrupted-plan group rebuilds
         }
 
     def register(self, model_id: str, model: KRRModel, *,
@@ -175,6 +197,8 @@ class GraphModelRegistry:
                     model.train_points, model.params,
                     domain_points=domain_points, margin=margin)
                 group = _TenantGroup(pred, self.grid_cache_slots)
+                group.gkey = gkey
+                group.domain_args = (domain_points, margin)
                 self._groups[gkey] = group
                 self.counters["plan_builds"] += 1
             mult = prediction_multiplier(model.kernel, group.pred,
@@ -199,6 +223,54 @@ class GraphModelRegistry:
             out["grids_resident"] = sum(
                 len(g.grids) for g in self._groups.values())
             return out
+
+    # -- guarded-execution surface -----------------------------------------
+    def invalidate_grids(self, model_id: str) -> int:
+        """Drop every cached grid of ``model_id`` (poisoned-state recovery).
+
+        The dual vectors live in the registered models, so the next request
+        rebuilds clean grids from them; only the cache is discarded."""
+        with self._lock:
+            group = self._model_group.get(model_id)
+            if group is None:
+                return 0
+            keys = [k for k in group.grids if k[0] == model_id]
+            for k in keys:
+                del group.grids[k]
+            self.counters["grid_invalidations"] += len(keys)
+            return len(keys)
+
+    @staticmethod
+    def plan_valid(group: _TenantGroup) -> bool:
+        """Invariant check for a group's frozen plan: the plan's own source
+        set must be finite and admissible under its own scaling.  A
+        corrupted plan (bit-flipped shift, clobbered geometry) violates
+        this; a healthy one never does."""
+        src = np.asarray(group.pred.scaled_src)
+        if not np.all(np.isfinite(src)):
+            return False
+        return bool(np.all(np.asarray(group.pred.admissible(
+            group.pred.scaled_src))))
+
+    def rebuild_group(self, model_id: str) -> bool:
+        """Rebuild ``model_id``'s whole tenant group from its registered
+        models: fresh prediction plan, fresh multipliers, empty grid cache.
+        The recovery path for a corrupted plan — the models themselves are
+        the source of truth."""
+        with self._lock:
+            group = self._model_group.get(model_id)
+            if group is None:
+                return False
+            items = list(group.entries.items())
+            domain_points, margin = group.domain_args
+            self._groups.pop(group.gkey, None)
+            for mid, _ in items:
+                self._model_group.pop(mid, None)
+            self.counters["group_rebuilds"] += 1
+        for mid, entry in items:  # register() takes the lock itself
+            self.register(mid, entry.model, domain_points=domain_points,
+                          margin=margin)
+        return True
 
     # -- grid cache ---------------------------------------------------------
     def ensure_grids(self, group: _TenantGroup,
@@ -258,53 +330,108 @@ class GraphServeEngine:
     """
 
     def __init__(self, registry: GraphModelRegistry, *, slots: int = 8,
-                 chunk: int = 128, backend: Optional[str] = None):
+                 chunk: int = 128, backend: Optional[str] = None,
+                 max_queue: Optional[int] = None, guards: bool = True,
+                 out_of_domain: str = "reject",
+                 breaker_threshold: int = 3, breaker_cooldown: int = 8,
+                 chaos=None):
+        """``max_queue`` bounds admission (submit rejects with backpressure
+        when full); ``guards=False`` disables the runtime guards (deadline
+        eviction, non-finite output checks, circuit breaker, plan
+        validation) for overhead benchmarking; ``out_of_domain`` is
+        ``"reject"`` or ``"replan"`` (exact slow-path predict);
+        ``chaos`` is an optional fault-injection schedule with an
+        ``apply(engine, tick) -> drop`` method
+        (:class:`repro.runtime.faultinject.TickChaos`)."""
+        if out_of_domain not in ("reject", "replan"):
+            raise ValueError(f"out_of_domain must be 'reject' or 'replan', "
+                             f"got {out_of_domain!r}")
         self.registry = registry
         self.slots = slots
         self.chunk = chunk
         self.backend = backend
-        self.queue: "queue.Queue[PredictRequest]" = queue.Queue()
+        self.guards = guards
+        self.out_of_domain = out_of_domain
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown = breaker_cooldown
+        self.chaos = chaos
+        self.queue: "queue.Queue[PredictRequest]" = \
+            queue.Queue(maxsize=max_queue or 0)
         self.active: list[Optional[PredictRequest]] = [None] * slots
         self.pos = np.zeros((slots,), np.int64)
         self._scaled: list[Optional[np.ndarray]] = [None] * slots
         self._group: list[Optional[_TenantGroup]] = [None] * slots
+        self._breaker_fails: dict[str, int] = {}
+        self._breaker_open_until: dict[str, int] = {}
         self.tick_log: list[TickStats] = []
         self.counters = {"ticks": 0, "rows": 0, "admitted": 0,
                          "finished": 0, "rejected": 0,
-                         "geometry_builds": 0}
+                         "geometry_builds": 0,
+                         # guard counters
+                         "backpressure": 0, "deadline_evicted": 0,
+                         "out_of_domain": 0, "replans": 0,
+                         "nonfinite": 0, "plan_rebuilds": 0,
+                         "breaker_trips": 0, "breaker_rejections": 0,
+                         "dropped_ticks": 0}
 
     # -- public -------------------------------------------------------------
-    def submit(self, req: PredictRequest) -> None:
+    def submit(self, req: PredictRequest) -> bool:
+        """Enqueue a request; False (request failed immediately) when the
+        bounded queue is full — backpressure instead of unbounded growth."""
         req.submitted_at = time.perf_counter()
-        self.queue.put(req)
+        try:
+            self.queue.put_nowait(req)
+        except queue.Full:
+            req.error = "queue full (backpressure)"
+            req.done = True
+            req.finished_at = time.perf_counter()
+            self.counters["backpressure"] += 1
+            return False
+        return True
 
     def step(self) -> TickStats:
         """One engine tick: admit, one packed gather per touched group,
         retire finished requests.  Returns this tick's stats."""
         t0 = time.perf_counter()
-        self._admit()
-        by_group: dict[int, list[int]] = {}
-        groups: dict[int, _TenantGroup] = {}
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            g = self._group[slot]
-            by_group.setdefault(id(g), []).append(slot)
-            groups[id(g)] = g
-        occupancy = sum(len(s) for s in by_group.values())
+        tick = self.counters["ticks"]
+        self._tick_guard = {"evicted": 0, "out_of_domain": 0,
+                            "nonfinite": 0, "rebuilds": 0}
+        dropped = bool(self.chaos is not None
+                       and self.chaos.apply(self, tick))
         rows = builds = hits = finished = 0
-        for gid, slot_ids in by_group.items():
-            r, b, h, f = self._tick_group(groups[gid], slot_ids)
-            rows += r
-            builds += b
-            hits += h
-            finished += f
+        by_group: dict[int, list[int]] = {}
+        if dropped:
+            self.counters["dropped_ticks"] += 1
+            occupancy = sum(1 for r in self.active if r is not None)
+        else:
+            if self.guards:
+                self._evict_expired()
+            self._admit()
+            groups: dict[int, _TenantGroup] = {}
+            for slot, req in enumerate(self.active):
+                if req is None:
+                    continue
+                g = self._group[slot]
+                by_group.setdefault(id(g), []).append(slot)
+                groups[id(g)] = g
+            occupancy = sum(len(s) for s in by_group.values())
+            for gid, slot_ids in by_group.items():
+                r, b, h, f = self._tick_group(groups[gid], slot_ids)
+                rows += r
+                builds += b
+                hits += h
+                finished += f
         stats = TickStats(
             queue_depth=self.queue.qsize(),
             occupancy=occupancy,
             groups=len(by_group), rows=rows, grid_builds=builds,
             grid_hits=hits, finished=finished,
-            seconds=time.perf_counter() - t0)
+            seconds=time.perf_counter() - t0,
+            evicted=self._tick_guard["evicted"],
+            out_of_domain=self._tick_guard["out_of_domain"],
+            nonfinite=self._tick_guard["nonfinite"],
+            rebuilds=self._tick_guard["rebuilds"],
+            dropped=dropped)
         self.tick_log.append(stats)
         self.counters["ticks"] += 1
         self.counters["rows"] += rows
@@ -324,6 +451,125 @@ class GraphServeEngine:
         req.finished_at = time.perf_counter()
         self.counters["rejected"] += 1
 
+    def _release(self, slot: int) -> None:
+        self.active[slot] = None
+        self._scaled[slot] = None
+        self._group[slot] = None
+
+    def _evict(self, slot: int, msg: str, counter: str) -> None:
+        """Fail an in-flight request and recycle its slot immediately."""
+        req = self.active[slot]
+        req.error = msg
+        req.done = True
+        req.finished_at = time.perf_counter()
+        self._release(slot)
+        self.counters[counter] += 1
+
+    def _evict_expired(self) -> None:
+        now = time.perf_counter()
+        for slot, req in enumerate(self.active):
+            if req is None or req.deadline_s is None:
+                continue
+            if now - req.submitted_at > req.deadline_s:
+                self._evict(slot, "deadline exceeded", "deadline_evicted")
+                self._tick_guard["evicted"] += 1
+
+    def _evict_queued(self, req: PredictRequest) -> None:
+        """A request whose deadline expired while still queued."""
+        req.error = "deadline exceeded"
+        req.done = True
+        req.finished_at = time.perf_counter()
+        self.counters["deadline_evicted"] += 1
+        self._tick_guard["evicted"] += 1
+
+    def _handle_inadmissible(self, req: PredictRequest, group: _TenantGroup,
+                             q: np.ndarray, scaled: np.ndarray):
+        """Admission found inadmissible scaled queries.  Three causes, in
+        the order checked: a corrupted plan (detect via the plan invariant,
+        rebuild the group from its models, retry), non-finite query points
+        (always rejected), or genuinely out-of-domain queries (rejected or
+        served via the exact replan slow path per ``out_of_domain``).
+
+        Returns ``(group, scaled)`` when the request may proceed onto a
+        slot, ``(None, None)`` when it was finished here (failed or
+        replan-served)."""
+        if self.guards and not self.registry.plan_valid(group):
+            # corrupted plan: rebuild the whole group from the registered
+            # models (the source of truth), then retry this admission
+            if self.registry.rebuild_group(req.model_id):
+                self.counters["plan_rebuilds"] += 1
+                self._tick_guard["rebuilds"] += 1
+                group = self.registry.group_of(req.model_id)
+                if group is not None:
+                    scaled = np.asarray(group.pred.scale_targets(q))
+                    if bool(np.all(np.asarray(
+                            group.pred.admissible(scaled)))):
+                        return group, scaled
+            if group is None or not self.registry.plan_valid(group):
+                self._fail(req, "serving plan corrupted and rebuild failed")
+                return None, None
+        self._tick_guard["out_of_domain"] += 1
+        if not np.all(np.isfinite(q)):
+            self._fail(req, "non-finite query points")
+            self.counters["out_of_domain"] += 1
+            return None, None
+        if self.out_of_domain == "replan":
+            self._replan(req)
+            return None, None
+        self._fail(req, "query points outside the registered serving "
+                        "domain (inadmissible after scaling)")
+        self.counters["out_of_domain"] += 1
+        return None, None
+
+    # -- circuit breaker ----------------------------------------------------
+    def _breaker_allow(self, model_id: str) -> bool:
+        return (self.counters["ticks"]
+                >= self._breaker_open_until.get(model_id, 0))
+
+    def _breaker_failure(self, model_id: str) -> None:
+        if not self.guards:
+            return
+        fails = self._breaker_fails.get(model_id, 0) + 1
+        if fails >= self.breaker_threshold:
+            # trip: shed this tenant's load for the cooldown, and drop its
+            # cached grids — poisoned serving state is the likely cause,
+            # and the registered models can rebuild clean grids on demand
+            self._breaker_open_until[model_id] = (
+                self.counters["ticks"] + 1 + self.breaker_cooldown)
+            self.counters["breaker_trips"] += 1
+            # half-open after cooldown: a single failure re-trips
+            self._breaker_fails[model_id] = self.breaker_threshold - 1
+            self.registry.invalidate_grids(model_id)
+        else:
+            self._breaker_fails[model_id] = fails
+
+    def _breaker_success(self, model_id: str) -> None:
+        self._breaker_fails.pop(model_id, None)
+
+    def _replan(self, req: PredictRequest) -> None:
+        """Serve an out-of-domain request through the exact slow path.
+
+        A full :func:`~repro.graph.krr.krr_predict` replans a prediction
+        operator over train ∪ query jointly, so any (finite) query
+        location is served correctly — at one-off replan cost instead of a
+        silently wrong torus wraparound."""
+        group = self.registry.group_of(req.model_id)
+        model = group.entries[req.model_id].model
+        if req.rhs is not None:
+            model = model._replace(
+                alpha=jnp.asarray(req.rhs, model.alpha.dtype))
+        out = np.asarray(krr_predict(model, jnp.asarray(req.query_points)))
+        if not np.all(np.isfinite(out)):
+            self._breaker_failure(req.model_id)
+            self._fail(req, "non-finite output from out-of-domain replan")
+            self.counters["nonfinite"] += 1
+            self._tick_guard["nonfinite"] += 1
+            return
+        req.output = out
+        req.done = True
+        req.finished_at = time.perf_counter()
+        self.counters["replans"] += 1
+
     def _admit(self) -> None:
         """Fill free slots from the queue (prefill = scale + admissibility).
 
@@ -340,9 +586,19 @@ class GraphServeEngine:
                     req = self.queue.get_nowait()
                 except queue.Empty:
                     return
+                if (self.guards and req.deadline_s is not None
+                        and time.perf_counter() - req.submitted_at
+                        > req.deadline_s):
+                    self._evict_queued(req)
+                    continue
                 group = self.registry.group_of(req.model_id)
                 if group is None:
                     self._fail(req, f"unknown model_id {req.model_id!r}")
+                    continue
+                if self.guards and not self._breaker_allow(req.model_id):
+                    self._fail(req, f"circuit open for model "
+                                    f"{req.model_id!r} (repeated failures)")
+                    self.counters["breaker_rejections"] += 1
                     continue
                 q = np.asarray(req.query_points)
                 if (q.ndim != 2
@@ -358,13 +614,17 @@ class GraphServeEngine:
                                f"rhs shape {np.asarray(req.rhs).shape} != "
                                f"({group.pred.n_source},)")
                     continue
+                if (self.guards and req.rhs is not None
+                        and not np.all(np.isfinite(np.asarray(req.rhs)))):
+                    self._fail(req, "non-finite rhs")
+                    continue
                 scaled = np.asarray(group.pred.scale_targets(q))
                 if not bool(np.all(np.asarray(
                         group.pred.admissible(scaled)))):
-                    self._fail(req, "query points outside the registered "
-                                    "serving domain (inadmissible after "
-                                    "scaling)")
-                    continue
+                    group, scaled = self._handle_inadmissible(
+                        req, group, q, scaled)
+                    if group is None:
+                        continue  # rejected or served via replan
                 req.output = np.zeros((q.shape[0],), scaled.dtype)
                 self.active[slot] = req
                 self.pos[slot] = 0
@@ -431,13 +691,22 @@ class GraphServeEngine:
         finished = 0
         for slot, row0, pos, take in takes:
             req = self.active[slot]
-            req.output[pos:pos + take] = out[row0:row0 + take]
+            seg = out[row0:row0 + take]
+            if self.guards and not np.all(np.isfinite(seg)):
+                # poisoned grid / multiplier: fail the request, feed the
+                # tenant's circuit breaker (tripping invalidates its grids)
+                self._evict(slot, "non-finite prediction output",
+                            "nonfinite")
+                self._tick_guard["nonfinite"] += 1
+                self._breaker_failure(req.model_id)
+                finished += 1
+                continue
+            req.output[pos:pos + take] = seg
             self.pos[slot] += take
             if self.pos[slot] >= req.query_points.shape[0]:
                 req.done = True
                 req.finished_at = time.perf_counter()
-                self.active[slot] = None
-                self._scaled[slot] = None
-                self._group[slot] = None
+                self._release(slot)
+                self._breaker_success(req.model_id)
                 finished += 1
         return row, n_built, len(columns) - n_built, finished

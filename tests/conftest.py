@@ -25,3 +25,8 @@ def pytest_configure(config):
         "multidevice: spawns subprocesses with "
         "XLA_FLAGS=--xla_force_host_platform_device_count=N (slow); "
         "deselect with -m 'not multidevice' for quick local runs")
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injection suite (repro.runtime.faultinject) — drives "
+        "solvers and the serving engine through seeded failures and asserts "
+        "recovery, isolation, and counters; run with -m chaos")

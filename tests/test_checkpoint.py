@@ -105,3 +105,49 @@ def test_resilient_resume_bit_identical(tmp_path):
                     jax.tree_util.tree_leaves(state1.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=0, atol=0)
+
+
+def test_straggler_detection_across_restore_and_replay(tmp_path):
+    """StepTimer + run_resilient interaction: the latency monitor's EWMA
+    state persists across a fault restart, so a synthetic straggler injected
+    AFTER the restore-and-replay is still flagged against the statistics
+    built before the fault — and the replayed steps are not misflagged.
+
+    A synthetic (sleep-paced) train step keeps timings controlled: the real
+    trainer's first-step compile time would pollute the warmup mean."""
+    import time as _time
+
+    state0 = {"x": jnp.zeros((4,), jnp.float32),
+              "step": jnp.asarray(0, jnp.int32)}
+
+    def train_step(state, batch):
+        return ({"x": state["x"] + batch, "step": state["step"] + 1},
+                {"loss": jnp.sum(batch)})
+
+    def batch_fn(s):  # batch_fn runs inside the timed step window
+        _time.sleep(0.30 if s == 5 else 0.01)
+        return jnp.full((4,), float(s), jnp.float32)
+
+    fired = {"done": False}
+
+    def fault_hook(s):
+        if s == 4 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFault("simulated node failure")
+
+    flagged = []
+    state1, info = run_resilient(
+        train_step, state0, batch_fn, total_steps=8,
+        ckpt_dir=str(tmp_path / "strag"), ckpt_every=2,
+        fault_hook=fault_hook, log_every=100,
+        on_straggler=lambda s, dt: flagged.append((s, dt)))
+    assert info["restarts"] == 1
+    # the post-restart straggler was flagged with its real latency ...
+    assert any(s == 5 and dt > 0.25 for s, dt in flagged), flagged
+    # ... and the replayed + steady steps were not misflagged
+    assert all(s == 5 for s, dt in flagged), flagged
+    # restore-and-replay really happened: the state is the step-8 state
+    # replayed deterministically (batches are a function of the step index)
+    assert int(np.asarray(state1["step"])) == 8
+    np.testing.assert_allclose(
+        np.asarray(state1["x"]), np.full((4,), float(sum(range(8)))))

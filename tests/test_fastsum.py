@@ -124,3 +124,17 @@ def test_linearity_property(a, b, seed):
     rhs = a * fs.matvec(x1) + b * fs.matvec(x2)
     np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
                                rtol=1e-9, atol=1e-9)
+
+
+def test_nonfinite_points_rejected_at_plan_time():
+    """A single NaN node would poison the min/max centering, collapse rho,
+    and silently corrupt the Morton geometry — planning must refuse it."""
+    kern = make_kernel("gaussian", sigma=3.5)
+    pts = np.asarray(RNG.normal(size=(50, 2)))
+    for bad in (np.nan, np.inf):
+        poisoned = pts.copy()
+        poisoned[17, 1] = bad
+        with pytest.raises(ValueError, match="non-finite coordinates"):
+            make_fastsum(kern, jnp.asarray(poisoned), SETUP_1)
+    # the clean set still plans
+    assert make_fastsum(kern, jnp.asarray(pts), SETUP_1) is not None

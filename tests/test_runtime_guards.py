@@ -1,0 +1,155 @@
+"""Runtime accuracy guards: the Lemma 3.1 probe consulted live.
+
+Small point sets keep the dense oracles cheap; the probe itself never
+builds a dense matrix (that is the point), so its behavior is cross-checked
+against ``core.error``'s exact O(n^2) machinery.  The Monte-Carlo eps
+estimator samples the whole admissible ball — including the regularization
+band actual point pairs never reach — so the probe bound is *conservative*
+(>= the exact bound): the guard can over-escalate, never under-protect.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FastsumParams, dense_normalized_adjacency, dense_weight_matrix,
+    make_fastsum, make_kernel,
+)
+from repro.core.error import aposteriori_report, lemma31_bound
+from repro.runtime import (
+    DirectKernelOperator, GuardPolicy, guarded_fastsum,
+    guarded_normalized_adjacency, probe_fastsum,
+)
+
+KERNEL = make_kernel("gaussian", sigma=3.5)
+# bound_tol with margin: at n=200 the probe bound is ~0.04 for N=16 and
+# inf for N=8 (degrees there are contaminated enough to zero out eta)
+TOL = 0.1
+
+
+def _points(n=200, d=2, seed=7):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(n, d)))
+
+
+def _vec(n, seed=100):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(n,)))
+
+
+def test_lemma31_bound_degenerate_inputs_read_as_worst_case():
+    assert lemma31_bound(float("nan"), 0.1) == float("inf")
+    assert lemma31_bound(0.5, float("nan")) == float("inf")
+    assert lemma31_bound(0.0, 0.0) == float("inf")
+    assert lemma31_bound(-0.1, 0.01) == float("inf")
+    assert np.isfinite(lemma31_bound(0.5, 0.01))
+
+
+def test_probe_matches_dense_aposteriori():
+    """The cheap probe's eta agrees with the exact dense report; its bound
+    is finite, conservative (>= exact), and exactly Lemma 3.1 of its own
+    (eta, eps)."""
+    pts = _points()
+    params = FastsumParams(n_bandwidth=32, m=4)
+    fs = make_fastsum(KERNEL, pts, params)
+    probe = probe_fastsum(KERNEL, pts, params, fs, n_samples=4096)
+    exact = aposteriori_report(KERNEL, pts, fs)
+    np.testing.assert_allclose(probe.eta, exact["eta"], rtol=1e-3)
+    assert probe.eps > 0 and np.isfinite(probe.bound)
+    assert probe.bound >= exact["bound"]  # never optimistic
+    np.testing.assert_allclose(probe.bound,
+                               lemma31_bound(probe.eta, probe.eps))
+
+
+def test_guard_accepts_adequate_bandwidth():
+    pts = _points()
+    op, report = guarded_fastsum(
+        KERNEL, pts, FastsumParams(n_bandwidth=16, m=4),
+        policy=GuardPolicy(bound_tol=TOL, max_bandwidth=256))
+    assert report.ok and report.fallback == "none"
+    assert report.escalations == 0
+    assert report.final.bound <= TOL
+    # the returned operator is a working fastsum
+    x = _vec(pts.shape[0])
+    assert np.all(np.isfinite(np.asarray(op.matvec(x))))
+
+
+def test_guard_escalates_bandwidth_until_bound_met():
+    """An undersized N must be doubled until the Lemma 3.1 bound passes."""
+    pts = _points()
+    op, report = guarded_fastsum(
+        KERNEL, pts, FastsumParams(n_bandwidth=8, m=4),
+        policy=GuardPolicy(bound_tol=TOL, max_bandwidth=256))
+    assert report.ok and report.fallback == "none"
+    assert report.escalations >= 1
+    assert report.final.bound <= TOL
+    assert report.final.n_bandwidth > 8
+    # attempts record the whole ladder, strictly increasing in N, and the
+    # rejected attempts all exceeded the tolerance
+    ns = [a.n_bandwidth for a in report.attempts]
+    assert ns == sorted(ns) and len(set(ns)) == len(ns)
+    assert all(a.bound > TOL for a in report.attempts[:-1])
+
+
+def test_guard_direct_fallback_below_threshold():
+    """Escalation ceiling reached + small problem -> the exact dense-math
+    operator, which matches the dense oracle to machine precision."""
+    pts = _points(n=150, seed=8)
+    op, report = guarded_fastsum(
+        KERNEL, pts, FastsumParams(n_bandwidth=8, m=4),
+        policy=GuardPolicy(bound_tol=0.0,  # unreachable: bound > 0 always
+                           max_bandwidth=16, direct_threshold=1024))
+    assert report.ok and report.fallback == "direct"
+    assert isinstance(op, DirectKernelOperator)
+    x = _vec(150)
+    ref = dense_weight_matrix(KERNEL, pts) @ x
+    np.testing.assert_allclose(np.asarray(op.matvec(x)), np.asarray(ref),
+                               rtol=1e-10, atol=1e-10)
+    # matvec_tilde adds the diagonal back; degrees = W @ 1
+    np.testing.assert_allclose(
+        np.asarray(op.matvec_tilde(x)),
+        np.asarray(ref + KERNEL.at_zero() * x), rtol=1e-10, atol=1e-10)
+    np.testing.assert_allclose(
+        np.asarray(op.degrees()),
+        np.asarray(dense_weight_matrix(KERNEL, pts)
+                   @ jnp.ones((150,), pts.dtype)),
+        rtol=1e-10, atol=1e-10)
+
+
+def test_guard_warns_unguarded_past_threshold():
+    """No tolerance met, problem too big for direct: the best attempt comes
+    back with ok=False and a RuntimeWarning — degraded, never silent."""
+    pts = _points(n=150, seed=9)
+    with pytest.warns(RuntimeWarning, match="UNGUARDED"):
+        op, report = guarded_fastsum(
+            KERNEL, pts, FastsumParams(n_bandwidth=8, m=4),
+            policy=GuardPolicy(bound_tol=0.0, max_bandwidth=16,
+                               direct_threshold=0))
+    assert not report.ok and report.fallback == "none"
+    assert report.final.n_bandwidth == 16  # best (largest-N) attempt
+
+
+def test_guarded_normalized_adjacency_matches_dense():
+    pts = _points(n=150, seed=10)
+    adj, report = guarded_normalized_adjacency(
+        KERNEL, pts, FastsumParams(n_bandwidth=32, m=4),
+        policy=GuardPolicy(bound_tol=TOL))
+    assert report.ok
+    x = _vec(150)
+    ref = dense_normalized_adjacency(KERNEL, pts) @ x
+    np.testing.assert_allclose(np.asarray(adj.matvec(x)), np.asarray(ref),
+                               atol=1e-4)
+
+
+def test_guarded_normalized_adjacency_direct_floor_matches_dense():
+    """The degradation-ladder floor also serves Algorithm 3.2: a direct
+    operator under the normalized adjacency equals the dense oracle."""
+    pts = _points(n=120, seed=11)
+    adj, report = guarded_normalized_adjacency(
+        KERNEL, pts, FastsumParams(n_bandwidth=8, m=4),
+        policy=GuardPolicy(bound_tol=0.0, max_bandwidth=8,
+                           direct_threshold=1024))
+    assert report.fallback == "direct"
+    x = _vec(120)
+    ref = dense_normalized_adjacency(KERNEL, pts) @ x
+    np.testing.assert_allclose(np.asarray(adj.matvec(x)), np.asarray(ref),
+                               rtol=1e-9, atol=1e-9)

@@ -194,3 +194,54 @@ def test_minres_indefinite():
     sol = minres(lambda x: a @ x, b, tol=1e-10, maxiter=2000)
     ref = np.linalg.solve(np.asarray(a), np.asarray(b))
     np.testing.assert_allclose(np.asarray(sol.x), ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Guarded execution (PR 7): non-finite rhs, quarantine, stagnation
+# ---------------------------------------------------------------------------
+
+def test_nonfinite_rhs_returns_immediately():
+    """Regression: a NaN/Inf rhs used to iterate to maxiter (every norm
+    comparison with NaN is False, so the active mask never cleared).  The
+    up-front validation must return at once with converged=False and the
+    per-column rhs_nonfinite flag set."""
+    a = _spd(60, seed=20)
+    for bad in (np.nan, np.inf):
+        b = jnp.asarray(np.full((60,), bad))
+        for solver in (cg, minres):
+            sol = solver(lambda x: a @ x, b, tol=1e-10, maxiter=5000)
+            assert int(sol.num_iters) == 0
+            assert not bool(sol.converged)
+            assert bool(sol.health.rhs_nonfinite)
+            assert not np.isfinite(float(sol.residual_norm))
+            assert np.all(np.isfinite(np.asarray(sol.x)))
+
+
+def test_nonfinite_rhs_column_isolated_in_batch():
+    """One poisoned rhs column must not affect its lockstep siblings."""
+    a = _spd(80, seed=21)
+    rng = np.random.default_rng(22)
+    b = rng.normal(size=(80, 3))
+    b[:, 1] = np.nan
+    bj = jnp.asarray(b)
+    for solver in (cg, minres):
+        sol = solver(lambda x: a @ x, bj, tol=1e-12, maxiter=1000)
+        health = sol.health
+        assert list(np.asarray(health.rhs_nonfinite)) == [False, True, False]
+        for c in (0, 2):
+            ref = np.linalg.solve(np.asarray(a), b[:, c])
+            np.testing.assert_allclose(np.asarray(sol.x[:, c]), ref,
+                                       rtol=1e-8, atol=1e-8)
+        assert np.all(np.asarray(sol.x[:, 1]) == 0.0)
+        assert np.all(np.isfinite(np.asarray(sol.x)))
+
+
+def test_healthy_solves_report_clean_health():
+    a = _spd(50, seed=23)
+    b = jnp.asarray(np.random.default_rng(24).normal(size=(50, 2)))
+    for solver in (cg, minres):
+        sol = solver(lambda x: a @ x, b, tol=1e-12, maxiter=500)
+        assert np.all(np.asarray(sol.converged))
+        h = sol.health
+        assert not np.any(np.asarray(h.any_fault))
+        assert np.all(np.asarray(h.breakdown_iter) == -1)
