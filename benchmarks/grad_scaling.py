@@ -1,0 +1,112 @@
+"""Gradient-step cost — the differentiable-fastsum overhead (ISSUE 8).
+
+Times one value-and-grad step of a scalar loss through the custom-VJP fused
+pipeline — kernel-parameter re-spectralization (``with_kernel``), forward
+matvec, transpose-pipeline backward — against the forward-only fused matvec,
+over growing n.  The backward pass is one extra pipeline traversal plus the
+spectral-mid VJP, so the ratio should stay well under the 3.5x target (and
+flat in n: both legs are O(n)).
+
+Also times a full KRR validation-loss gradient (implicit-diff CG: forward
+solve + one adjoint solve) against the forward-only loss evaluation, the
+quantity ``krr_fit_grad`` pays per optimization step.
+
+Emits ``BENCH_grad.json`` (path overridable via REPRO_BENCH_GRAD_JSON) with
+seconds per step for every (case, n) — the grad-path perf baseline future
+PRs regress against.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Reporter, quick, timeit
+from repro.core import SETUP_2, make_fastsum, make_kernel
+from repro.data.synthetic import spiral
+from repro.graph import krr_validation_loss
+
+SIGMA = 3.5
+RATIO_TARGET = 3.5  # value-and-grad step <= 3.5x the forward-only matvec
+BENCH_JSON = os.environ.get("REPRO_BENCH_GRAD_JSON", "BENCH_grad.json")
+
+
+@jax.jit
+def _forward_loss(op, sigma, x, w):
+    kern = make_kernel("gaussian", sigma=sigma)
+    return jnp.vdot(w, op.with_kernel(kern).matvec_tilde(x))
+
+
+_value_and_grad = jax.jit(jax.value_and_grad(_forward_loss, argnums=(1, 2)))
+
+
+def run(report: Reporter | None = None) -> None:
+    rep = report or Reporter("grad_scaling")
+    sizes = [2000, 8000] if quick() else [2000, 8000, 20000, 50000]
+    records: list[dict] = []
+
+    def record(name: str, n: int, t: float, **extra) -> None:
+        rep.add(f"{name} n={n}", t, "s", **extra)
+        records.append({"path": name, "n": n, "seconds": t, **extra})
+
+    for n in sizes:
+        points, _ = spiral(n, seed=2)
+        pts = jnp.asarray(points)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal(n))
+        w = jnp.asarray(rng.standard_normal(n))
+        sigma = jnp.asarray(SIGMA)
+        kernel = make_kernel("gaussian", sigma=SIGMA)
+        op = make_fastsum(kernel, pts, SETUP_2)
+
+        # forward-only baseline: same jitted spectralize+matvec composite the
+        # grad step differentiates, so the ratio isolates the backward cost
+        t_fwd, _ = timeit(lambda: _forward_loss(op, sigma, x, w))
+        record("forward-loss", n, t_fwd)
+        t_vag, _ = timeit(lambda: _value_and_grad(op, sigma, x, w))
+        ratio = t_vag / t_fwd
+        record("value-and-grad", n, t_vag, ratio=round(ratio, 2),
+               target=RATIO_TARGET, within_target=bool(ratio <= RATIO_TARGET))
+
+        # raw fused matvec (no respectralization) for context
+        t_mv, _ = timeit(lambda: op.matvec_tilde(x))
+        record("matvec-only", n, t_mv)
+
+    # one KRR validation-loss gradient step (implicit-diff CG) at the
+    # smallest size: the per-step cost of krr_fit_grad
+    n = sizes[0]
+    rng = np.random.default_rng(1)
+    xtr = jnp.asarray(rng.uniform(-0.25, 0.25, (n, 2)))
+    xva = jnp.asarray(rng.uniform(-0.25, 0.25, (n // 4, 2)))
+    ftr = jnp.sin(8 * xtr[:, 0]) + jnp.cos(8 * xtr[:, 1])
+    fva = jnp.sin(8 * xva[:, 0]) + jnp.cos(8 * xva[:, 1])
+    kern = make_kernel("gaussian", sigma=0.4)
+    gop = make_fastsum(kern, xtr, SETUP_2)
+    pop = make_fastsum(kern, xtr, SETUP_2, target_points=xva)
+
+    def val_loss(ls, lb):
+        return krr_validation_loss("gaussian", gop, pop, ftr, fva, ls, lb,
+                                   tol=1e-8, maxiter=400)
+
+    loss_fn = jax.jit(val_loss)
+    grad_fn = jax.jit(jax.value_and_grad(val_loss, argnums=(0, 1)))
+    ls, lb = jnp.asarray(np.log(0.4)), jnp.asarray(np.log(1e-2))
+    t_loss, _ = timeit(lambda: loss_fn(ls, lb))
+    record("krr-val-loss", n, t_loss)
+    t_grad, _ = timeit(lambda: grad_fn(ls, lb))
+    record("krr-val-grad", n, t_grad, ratio=round(t_grad / t_loss, 2))
+
+    rep.save()
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"bench": "grad_scaling", "unit": "s", "quick": quick(),
+                   "ratio_target": RATIO_TARGET, "rows": records}, f,
+                  indent=1)
+    print(f"wrote {BENCH_JSON} ({len(records)} rows)")
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,8 @@ MODULES = [
      "Fig 3d core claim: O(n) NFFT matvec vs O(n^2) direct"),
     ("sweep", "benchmarks.sweep_scaling",
      "Operator-bank sigma sweep: lockstep bank CG vs sequential solves"),
+    ("grad", "benchmarks.grad_scaling",
+     "Differentiable fastsum: value-and-grad step vs forward-only matvec"),
     ("roofline", "benchmarks.roofline_report",
      "Roofline tables from the multi-pod dry-run"),
 ]

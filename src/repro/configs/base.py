@@ -61,6 +61,9 @@ class NFFTAttentionConfig:
     # sigma = 0.15 keeps both the bandwidth-truncation and periodization
     # errors of K_RF below ~1e-5 at N = 32 (see models/nfft_attention.py)
     sigma: float = 0.15
+    # learn the kernel width: adds a log_sigma parameter leaf and routes
+    # b_hat through the differentiable kernel_fourier_coefficients path
+    learn_sigma: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -4,8 +4,8 @@ Public API re-exports.
 """
 
 from repro.core.kernels import (  # noqa: F401
-    Kernel, make_kernel, GAUSSIAN, LAPLACIAN_RBF, MULTIQUADRIC,
-    INVERSE_MULTIQUADRIC, ALL_KERNELS,
+    Kernel, kernel_from_param, make_kernel, GAUSSIAN, LAPLACIAN_RBF,
+    MULTIQUADRIC, INVERSE_MULTIQUADRIC, ALL_KERNELS, KERNEL_PARAM_NAME,
 )
 from repro.core.fastsum import (  # noqa: F401
     FastsumParams, FastsumOperator, FastsumOperatorBank,

@@ -122,16 +122,46 @@ class FastsumOperator:
     multiplier_half: Array = None
     src_window: WindowGeometry = None
     tgt_window: WindowGeometry = None
+    # Re-spectralization state: the admissible-ball scale factor and the
+    # accuracy parameters the operator was planned with.  Geometry (points,
+    # rho, Morton windows) is fixed plan-time data with zero cotangents; the
+    # spectral children above are the param-dependent, differentiable half —
+    # :meth:`with_kernel` rebuilds exactly those for a new (possibly traced)
+    # kernel without replanning.
+    rho: Array = None
+    fs_params: FastsumParams = None  # static
 
     def tree_flatten(self):
         children = (self.b_hat, self.scaled_src, self.scaled_tgt,
                     self.output_scale, self.kernel_at_zero,
-                    self.multiplier_half, self.src_window, self.tgt_window)
-        return children, (self.plan,)
+                    self.multiplier_half, self.src_window, self.tgt_window,
+                    self.rho)
+        return children, (self.plan, self.fs_params)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(aux[0], *children)
+        return cls(aux[0], *children, fs_params=aux[1])
+
+    def with_kernel(self, kernel: Kernel) -> "FastsumOperator":
+        """Same plan/geometry, new kernel: rebuild only the spectral data.
+
+        Jit/grad-safe: ``kernel`` may carry traced parameters (sigma/c), in
+        which case the returned operator's ``b_hat`` / ``multiplier_half`` /
+        ``output_scale`` / ``kernel_at_zero`` are traced functions of them —
+        the seam gradient-based model selection differentiates through.
+        """
+        if self.rho is None or self.fs_params is None:
+            raise ValueError(
+                "with_kernel needs the planning state (rho, fs_params); "
+                "this operator was built by hand or by an older path — "
+                "re-plan it with make_fastsum")
+        b_hat, mult_half, out_scale, k0_corr = _member_spectral(
+            kernel, self.rho, self.plan, self.fs_params)
+        rdt = jnp.real(b_hat).dtype
+        return dataclasses.replace(
+            self, b_hat=b_hat, multiplier_half=mult_half,
+            output_scale=jnp.asarray(out_scale, dtype=rdt),
+            kernel_at_zero=jnp.asarray(k0_corr, dtype=rdt))
 
     @property
     def n_source(self) -> int:
@@ -245,11 +275,10 @@ def _member_spectral(kernel: Kernel, rho, plan: NfftPlan,
     The only kernel-dependent plan-time work — everything else
     (:func:`_scaled_plan`) is shared across a bank's members.
     """
-    rescaled_kernel = kernel.rescaled(float(rho)) if not isinstance(rho, jax.core.Tracer) else kernel.rescaled(1.0)
-    # NOTE: rho is a concrete value in every supported entry path (setup is
-    # done eagerly, outside jit); the Tracer branch only exists to fail soft
-    # if someone jits the operator builders — accuracy tests cover the
-    # eager path.
+    # rho may be a concrete scalar (eager planning) or a tracer (operator
+    # construction / re-spectralization under jit or grad) — Kernel carries
+    # traced parameters natively, so no concretization is needed here.
+    rescaled_kernel = kernel.rescaled(rho)
     b_hat = kernel_fourier_coefficients(rescaled_kernel, plan.d,
                                         params.n_bandwidth, params.p_eff,
                                         params.eps_b_eff)
@@ -286,6 +315,8 @@ def make_fastsum(
         multiplier_half=mult_half,
         src_window=src_win,
         tgt_window=tgt_win,
+        rho=jnp.asarray(rho),
+        fs_params=params,
     )
 
 
@@ -561,8 +592,9 @@ def make_fastsum_bank(
         b_hat_bank=b_hat_bank,
         scaled_src=scaled_src,
         scaled_tgt=scaled_tgt,
-        kernel_at_zero=jnp.asarray(np.asarray(k0s),
-                                   dtype=jnp.real(b_hat_bank).dtype),
+        kernel_at_zero=jnp.stack(
+            [jnp.asarray(k) for k in k0s]).astype(
+                jnp.real(b_hat_bank).dtype),
         multiplier_bank=jnp.stack(mults),
         src_window=src_win,
         tgt_window=tgt_win,

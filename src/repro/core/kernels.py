@@ -5,6 +5,15 @@ profile ``phi(r) = K(y)`` for ``r = ||y||``, its value at the origin, and the
 parameter rescaling used by Algorithm 3.2 step 2 when nodes are shrunk by the
 correction factor ``rho`` (Gaussian / Laplacian RBF rescale ``sigma``;
 (inverse) multiquadric rescale ``c`` and additionally scale the *output*).
+
+``Kernel`` is a registered pytree whose leaves are the parameter values
+(``sigma`` / ``c``).  Parameters may be plain floats *or* traced jnp scalars:
+``make_kernel`` keeps concrete inputs as Python floats (so kernels built
+eagerly stay hashable and valid jit static arguments) and passes tracers
+through untouched, which makes ``at_zero`` / ``rescaled`` / the spectral setup
+differentiable w.r.t. sigma and c.  Crossing a jit/grad boundary as a pytree
+rebuilds ``phi`` from the (possibly traced) leaves via the shared profile
+builders, so the closure and the ``params`` dict can never drift apart.
 """
 
 from __future__ import annotations
@@ -12,7 +21,69 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
+
+
+def _as_param(v):
+    """Concrete scalars -> Python float (hashable); tracers pass through."""
+    if isinstance(v, jax.core.Tracer):
+        return v
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return v
+
+
+# Shared radial-profile builders.  make_kernel and pytree unflattening both go
+# through these, so a kernel round-tripped through tree_flatten/unflatten (or
+# re-materialized from traced leaves inside grad/jit) compares equal to a
+# freshly built one with the same concrete parameters: the closure location
+# and captured cell values — which feed Kernel._phi_key — are identical.
+
+def _phi_gaussian(params):
+    sigma = params["sigma"]
+
+    def phi(r):
+        return jnp.exp(-(r * r) / (sigma * sigma))
+
+    return phi
+
+
+def _phi_laplacian_rbf(params):
+    sigma = params["sigma"]
+
+    def phi(r):
+        return jnp.exp(-r / sigma)
+
+    return phi
+
+
+def _phi_multiquadric(params):
+    c = params["c"]
+
+    def phi(r):
+        return jnp.sqrt(r * r + c * c)
+
+    return phi
+
+
+def _phi_inverse_multiquadric(params):
+    c = params["c"]
+
+    def phi(r):
+        return 1.0 / jnp.sqrt(r * r + c * c)
+
+    return phi
+
+
+# name -> (profile builder, output_scale_exponent)
+_PHI_BUILDERS = {
+    "gaussian": (_phi_gaussian, 0),
+    "laplacian_rbf": (_phi_laplacian_rbf, 0),
+    "multiquadric": (_phi_multiquadric, -1),
+    "inverse_multiquadric": (_phi_inverse_multiquadric, 1),
+}
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -22,7 +93,8 @@ class Kernel:
     Attributes:
       name: identifier used in configs / benchmarks.
       phi: radial profile, vectorized over ``r >= 0``.
-      params: kernel parameters (``sigma`` or ``c``).
+      params: kernel parameters (``sigma`` or ``c``); floats or traced jnp
+        scalars — the pytree leaves of this Kernel.
       output_scale_exponent: after rescaling nodes by ``rho`` (and parameters
         per :meth:`rescaled`), the fast-summation output must be multiplied by
         ``rho**output_scale_exponent`` to recover the original-kernel sums.
@@ -72,16 +144,21 @@ class Kernel:
     def __call__(self, r):
         return self.phi(jnp.asarray(r))
 
-    def at_zero(self) -> float:
-        """K(0) — used for the W = W̃ − K(0)·I correction."""
-        return float(self.phi(jnp.asarray(0.0)))
+    def at_zero(self) -> jnp.ndarray:
+        """K(0) — used for the W = W̃ − K(0)·I correction.
 
-    def rescaled(self, rho: float) -> "Kernel":
+        Returns a jnp scalar (differentiable w.r.t. the kernel parameters
+        when they are traced); wrap in ``float()`` for host-side use.
+        """
+        return self.phi(jnp.asarray(0.0))
+
+    def rescaled(self, rho) -> "Kernel":
         """Kernel with parameters adjusted for nodes scaled by ``rho``.
 
         Algorithm 3.2 step 2: Gaussian/Laplacian RBF replace sigma by
         ``rho*sigma``; multiquadric kernels replace c by ``c*rho`` (so that
         ``K_rescaled(rho*y) = rho**(-output_scale_exponent) * K(y)``).
+        ``rho`` may be a traced jnp scalar.
         """
         if self.name in ("gaussian", "laplacian_rbf"):
             return make_kernel(self.name, sigma=self.params["sigma"] * rho)
@@ -90,48 +167,46 @@ class Kernel:
         raise ValueError(f"unknown kernel {self.name!r}")
 
 
-def make_kernel(name: str, *, sigma: float | None = None, c: float | None = None) -> Kernel:
-    """Factory for the paper's four kernels (Section 2)."""
-    if name == "gaussian":
+def _kernel_flatten(kernel: Kernel):
+    keys = tuple(sorted(kernel.params))
+    children = tuple(kernel.params[k] for k in keys)
+    # phi is rebuilt from the leaves for the named kernels; a custom phi is
+    # carried in the static aux (its closure then ignores new leaf values —
+    # custom-phi kernels are opaque to parameter differentiation).
+    phi = None if kernel.name in _PHI_BUILDERS else kernel.phi
+    aux = (kernel.name, keys, kernel.output_scale_exponent,
+           kernel.singular_at_origin, phi)
+    return children, aux
+
+
+def _kernel_unflatten(aux, children) -> Kernel:
+    name, keys, exponent, singular, phi = aux
+    params = dict(zip(keys, children))
+    if phi is None:
+        phi = _PHI_BUILDERS[name][0](params)
+    return Kernel(name, phi, params, exponent, singular)
+
+
+jax.tree_util.register_pytree_node(Kernel, _kernel_flatten, _kernel_unflatten)
+
+
+def make_kernel(name: str, *, sigma=None, c=None) -> Kernel:
+    """Factory for the paper's four kernels (Section 2).
+
+    ``sigma`` / ``c`` may be Python floats (eager, hashable kernel) or traced
+    jnp scalars (differentiable kernel inside grad/jit).
+    """
+    if name not in _PHI_BUILDERS:
+        raise ValueError(f"unknown kernel {name!r}")
+    builder, exponent = _PHI_BUILDERS[name]
+    if name in ("gaussian", "laplacian_rbf"):
         assert sigma is not None
-        s2 = float(sigma) ** 2
-
-        def phi(r):
-            return jnp.exp(-(r * r) / s2)
-
-        return Kernel("gaussian", phi, {"sigma": float(sigma)})
-
-    if name == "laplacian_rbf":
-        assert sigma is not None
-        s = float(sigma)
-
-        def phi(r):
-            return jnp.exp(-r / s)
-
-        return Kernel("laplacian_rbf", phi, {"sigma": s})
-
-    if name == "multiquadric":
+        params = {"sigma": _as_param(sigma)}
+    else:
         assert c is not None
-        c2 = float(c) ** 2
-
-        def phi(r):
-            return jnp.sqrt(r * r + c2)
-
-        # K(rho*y) with c->c*rho equals rho*K(y): output must be scaled by 1/rho
-        # => exponent -1 in the convention output *= rho**exponent ... we store
-        # the exponent such that  original = rho**exponent * rescaled_output.
-        return Kernel("multiquadric", phi, {"c": float(c)}, output_scale_exponent=-1)
-
-    if name == "inverse_multiquadric":
-        assert c is not None
-        c2 = float(c) ** 2
-
-        def phi(r):
-            return 1.0 / jnp.sqrt(r * r + c2)
-
-        return Kernel("inverse_multiquadric", phi, {"c": float(c)}, output_scale_exponent=1)
-
-    raise ValueError(f"unknown kernel {name!r}")
+        params = {"c": _as_param(c)}
+    return Kernel(name, builder(params), params,
+                  output_scale_exponent=exponent)
 
 
 GAUSSIAN = "gaussian"
@@ -140,3 +215,17 @@ MULTIQUADRIC = "multiquadric"
 INVERSE_MULTIQUADRIC = "inverse_multiquadric"
 
 ALL_KERNELS = (GAUSSIAN, LAPLACIAN_RBF, MULTIQUADRIC, INVERSE_MULTIQUADRIC)
+
+#: The parameter name each named kernel exposes (sigma or c) — handy for
+#: generic parameter sweeps / gradient-based model selection.
+KERNEL_PARAM_NAME = {
+    "gaussian": "sigma",
+    "laplacian_rbf": "sigma",
+    "multiquadric": "c",
+    "inverse_multiquadric": "c",
+}
+
+
+def kernel_from_param(name: str, value) -> Kernel:
+    """Build a named kernel from its single scalar parameter (float or traced)."""
+    return make_kernel(name, **{KERNEL_PARAM_NAME[name]: value})

@@ -37,51 +37,57 @@ import numpy as np
 from repro.core.kernels import Kernel
 
 
-def kernel_radial_derivatives(kernel: Kernel, r0: float, order: int) -> np.ndarray:
+def kernel_radial_derivatives(kernel: Kernel, r0: float, order: int) -> jnp.ndarray:
     """Values ``[K(r0), K'(r0), ..., K^(order-1)(r0)]`` via nested jax.grad.
 
     Evaluated in float64 at setup time, *eagerly*: jitting the grad chain
     here compiled ``order`` fresh scalar XLA programs per kernel instance —
     ~150 ms of pure compile per member of a sigma sweep, for a computation
-    that runs in microseconds op-by-op.
+    that runs in microseconds op-by-op.  Returns a jnp vector so the chain
+    stays differentiable w.r.t. traced kernel parameters (the nested
+    ``jax.grad`` is over ``r`` only; parameter tracers captured by ``phi``
+    flow through as constants of that inner differentiation).
     """
     derivs = []
     f = lambda r: kernel.phi(r)
     g = f
     for _ in range(order):
-        derivs.append(float(g(jnp.float64(r0))))
+        derivs.append(g(jnp.float64(r0)))
         g = jax.grad(g)
-    return np.asarray(derivs, dtype=np.float64)
+    return jnp.stack([jnp.asarray(v, dtype=jnp.float64) for v in derivs])
 
 
-def two_point_taylor(kernel: Kernel, p: int, eps_b: float) -> np.ndarray:
+def two_point_taylor(kernel: Kernel, p: int, eps_b: float) -> jnp.ndarray:
     """Coefficients (ascending, in t=(r-a)/(b-a)) of the transition poly T_B.
 
     Returns ``coeffs`` such that ``T_B(r) = sum_k coeffs[k] * t**k`` with
-    ``t = (r - a)/(b - a)``, ``a = 1/2 - eps_B``, ``b = 1/2``.
+    ``t = (r - a)/(b - a)``, ``a = 1/2 - eps_B``, ``b = 1/2``.  The linear
+    system matrix depends only on the static (p, eps_B) and stays numpy; the
+    right-hand side carries the kernel derivatives, so the returned
+    coefficients are differentiable w.r.t. traced kernel parameters.
     """
     assert p >= 1
     a = 0.5 - eps_b
     h = eps_b  # b - a
     n_coef = 2 * p - 1  # degree 2p-2
     A = np.zeros((n_coef, n_coef))
-    rhs = np.zeros(n_coef)
 
     # Conditions at t=0 (r=a): T^(j)(a) = K^(j)(a) * h^j (chain rule in t).
     kd = kernel_radial_derivatives(kernel, a, p)
+    rhs_head = kd * jnp.asarray([h ** j for j in range(p)], dtype=kd.dtype)
     for j in range(p):
         # d^j/dt^j of t^k at t=0 is j! * [k == j]
         A[j, j] = float(_fact(j))
-        rhs[j] = kd[j] * (h ** j)
 
     # Conditions at t=1 (r=b): T^(j)(b) = 0 for j=1..p-1.
     for idx, j in enumerate(range(1, p)):
         row = p + idx
         for k in range(j, n_coef):
             A[row, k] = _falling(k, j)
-        rhs[row] = 0.0
 
-    coeffs = np.linalg.solve(A, rhs)
+    rhs = jnp.concatenate(
+        [rhs_head, jnp.zeros(n_coef - p, dtype=rhs_head.dtype)])
+    coeffs = jnp.linalg.solve(jnp.asarray(A, dtype=rhs.dtype), rhs)
     return coeffs
 
 

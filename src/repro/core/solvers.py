@@ -43,6 +43,7 @@ burns the full ``maxiter`` budget).
 
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -169,7 +170,7 @@ def _finish(matvec: Matvec, b_safe: Array, x: Array, tol_abs: Array,
 def cg(matvec: Matvec, b: Array, *, x0: Array | None = None,
        tol: float = 1e-8, maxiter: int = 1000,
        preconditioner: Matvec | None = None,
-       stall_window: int = 250) -> SolveResult:
+       stall_window: int = 250, implicit_diff: bool = True) -> SolveResult:
     """Preconditioned conjugate gradients for SPD operators.
 
     ``b`` (n,): scalar recurrence, scalar result fields.  ``b`` (n, C):
@@ -179,7 +180,101 @@ def cg(matvec: Matvec, b: Array, *, x0: Array | None = None,
     ``stall_window`` > 0 freezes a column whose residual fails to improve
     (by a relative ``1e-3``) for that many consecutive iterations; 0
     disables stagnation detection.  Guard flags land in ``result.health``.
+
+    With ``implicit_diff=True`` (the default) the solve is differentiable
+    by the implicit function theorem instead of by unrolling the Krylov
+    loop: for ``A x* = b`` with symmetric ``A``, the backward pass solves
+    ``A w = x̄`` — one more CG on the *same* operator (same tolerance,
+    preconditioner, and guard machinery) — giving ``b̄ = w`` and, for any
+    operator parameters θ captured by the ``matvec`` closure,
+    ``θ̄ = −∂θ⟨w, A(θ) x*⟩``.  Closed-over tracers are hoisted out of the
+    closure via ``jax.closure_convert``, so gradients reach spectral
+    multipliers / kernel parameters inside a fastsum matvec transparently.
+    Only ``x`` is differentiable; the diagnostics (``residual_norm``,
+    ``num_iters``, ``converged``, ``health``) are treated as
+    non-differentiable outputs.  Quarantined columns (``health.any_fault``)
+    propagate exactly zero cotangents — a faulted solve never emits NaN
+    gradients.  ``implicit_diff=False`` restores the plain forward-only
+    recurrence (matvecs that refuse abstract tracing also fall back to it
+    automatically).
     """
+    if implicit_diff:
+        conv = _try_closure_convert(matvec, b, preconditioner)
+        if conv is not None:
+            mv_c, mv_args, pc_c, pc_args = conv
+            return _cg_implicit(mv_c, pc_c, (tol, maxiter, stall_window),
+                                b, x0, mv_args, pc_args)
+    return _cg_plain(matvec, b, x0=x0, tol=tol, maxiter=maxiter,
+                     preconditioner=preconditioner,
+                     stall_window=stall_window)
+
+
+def _try_closure_convert(matvec, b, preconditioner):
+    """Hoist closed-over jax values out of the matvec/preconditioner.
+
+    Returns ``(mv_c, mv_args, pc_c, pc_args)`` or None when the callables
+    cannot be abstractly traced (host callbacks, shape-dependent Python
+    control flow) — the caller then degrades to the forward-only solver.
+    """
+    example = jnp.zeros(b.shape, b.dtype)
+    try:
+        mv_c, mv_args = jax.closure_convert(matvec, example)
+        if preconditioner is None:
+            pc_c, pc_args = None, []
+        else:
+            pc_c, pc_args = jax.closure_convert(preconditioner, example)
+        return mv_c, tuple(mv_args), pc_c, tuple(pc_args)
+    except Exception:
+        return None
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _cg_implicit(mv_c, pc_c, statics, b, x0, mv_args, pc_args):
+    tol, maxiter, stall_window = statics
+    mv = lambda v: mv_c(v, *mv_args)
+    pc = None if pc_c is None else (lambda v: pc_c(v, *pc_args))
+    return _cg_plain(mv, b, x0=x0, tol=tol, maxiter=maxiter,
+                     preconditioner=pc, stall_window=stall_window)
+
+
+def _cg_implicit_fwd(mv_c, pc_c, statics, b, x0, mv_args, pc_args):
+    sol = _cg_implicit(mv_c, pc_c, statics, b, x0, mv_args, pc_args)
+    return sol, (sol.x, sol.health, mv_args, pc_args)
+
+
+def _cg_implicit_bwd(mv_c, pc_c, statics, res, ct):
+    x_star, health, mv_args, pc_args = res
+    tol, maxiter, stall_window = statics
+    # Only x carries a cotangent; diagnostics are non-differentiable.
+    xbar = ct.x
+    # SolveHealth quarantine: zero the cotangents of faulted columns (their
+    # primal iterate is not a solution of A x = b, so the implicit-function
+    # identity does not hold there) and scrub non-finite cotangents — a
+    # guarded solve never emits NaN gradients.
+    keep = (~health.any_fault).astype(x_star.dtype)
+    xbar = jnp.where(jnp.isfinite(xbar), xbar, 0.0) * keep
+    mv = lambda v: mv_c(v, *mv_args)
+    pc = None if pc_c is None else (lambda v: pc_c(v, *pc_args))
+    wsol = _cg_plain(mv, xbar, tol=tol, maxiter=maxiter, preconditioner=pc,
+                     stall_window=stall_window)
+    w = jnp.where(jnp.isfinite(wsol.x), wsol.x, 0.0) * keep
+    # b̄ = w;  θ̄ = −vjp_θ(θ ↦ A(θ) x*)(w)  for the hoisted closure args.
+    _, pull_args = jax.vjp(lambda a: mv_c(x_star, *a), mv_args)
+    (mv_args_bar,) = pull_args(w)
+    mv_args_bar = jax.tree_util.tree_map(lambda t: -t, mv_args_bar)
+    # The preconditioner changes the iteration, not the solution: zeros.
+    pc_args_bar = jax.tree_util.tree_map(jnp.zeros_like, pc_args)
+    return w, None, mv_args_bar, pc_args_bar
+
+
+_cg_implicit.defvjp(_cg_implicit_fwd, _cg_implicit_bwd)
+
+
+def _cg_plain(matvec: Matvec, b: Array, *, x0: Array | None = None,
+              tol: float = 1e-8, maxiter: int = 1000,
+              preconditioner: Matvec | None = None,
+              stall_window: int = 250) -> SolveResult:
+    """The forward-only CG recurrence (also the implicit VJP's inner solve)."""
     matvec, b, x0, preconditioner, batched = _as_columns(
         matvec, b, x0, preconditioner)
     rhs_bad, b, x0 = _validate_rhs(b, x0)

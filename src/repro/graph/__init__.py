@@ -6,6 +6,7 @@ from repro.graph.ssl import (  # noqa: F401
     kernel_ssl_cg_multilayer, kernel_ssl_eig, make_training_vector,
 )
 from repro.graph.krr import (  # noqa: F401
-    krr_fit, krr_fit_sweep, krr_pred_cache_stats, krr_predict,
+    krr_fit, krr_fit_grad, krr_fit_sweep, krr_pred_cache_stats, krr_predict,
     krr_predict_direct, krr_predict_many, krr_prediction_operator,
-    krr_sweep_model, points_fingerprint, KRRModel, KRRSweepResult)
+    krr_sweep_model, krr_validation_loss, points_fingerprint, KRRModel,
+    KRRGradResult, KRRSweepResult)

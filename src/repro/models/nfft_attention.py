@@ -72,6 +72,30 @@ def kernel_coefficients(bandwidth: int, d: int, sigma: float) -> np.ndarray:
     return out.reshape(-1)
 
 
+def kernel_coefficients_traced(bandwidth: int, d: int, sigma: Array) -> Array:
+    """Differentiable b_hat for a traced Gaussian width (learn_sigma path).
+
+    Same quantity as :func:`kernel_coefficients` but computed in-graph so
+    gradients flow sigma -> profile samples -> FFT -> b_hat -> attention.
+    """
+    from repro.core.kernels import make_kernel
+    from repro.core.regularization import kernel_fourier_coefficients
+
+    kern = make_kernel("gaussian", sigma=sigma)
+    b = kernel_fourier_coefficients(kern, d, bandwidth, p=4, eps_b=0.0)
+    return jnp.real(b).reshape(-1).astype(jnp.float32)
+
+
+def _sigma_and_bhat(params: dict, nc) -> tuple[Array | float, Array]:
+    """Kernel width + flat Fourier coefficients, traced iff learn_sigma."""
+    if "log_sigma" in params:
+        sigma = jnp.exp(params["log_sigma"].astype(jnp.float32))
+        return sigma, kernel_coefficients_traced(nc.bandwidth,
+                                                 nc.feature_dim, sigma)
+    return nc.sigma, jnp.asarray(
+        kernel_coefficients(nc.bandwidth, nc.feature_dim, nc.sigma))
+
+
 def phase_features(x: Array, freqs: Array) -> tuple[Array, Array]:
     """cos/sin features (real pair of phi(x)).  x: (..., d) -> (..., N^d)."""
     angles = 2.0 * jnp.pi * jnp.einsum("...d,ld->...l",
@@ -83,12 +107,15 @@ def init_nfft_attention(key: Array, cfg: ArchConfig) -> dict:
     nc = cfg.nfft_attention
     d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim_eff
     ks = jax.random.split(key, 4)
-    return {
+    params = {
         "wqf": dense_init(ks[0], (d, h * nc.feature_dim), cfg.pdtype),
         "wkf": dense_init(ks[1], (d, h * nc.feature_dim), cfg.pdtype),
         "wv": dense_init(ks[2], (d, h * hd), cfg.pdtype),
         "wo": dense_init(ks[3], (h * hd, d), cfg.pdtype),
     }
+    if getattr(nc, "learn_sigma", False):
+        params["log_sigma"] = jnp.asarray(np.log(nc.sigma), jnp.float32)
+    return params
 
 
 def _features(params, x, cfg):
@@ -113,8 +140,7 @@ def nfft_attention_forward(params: dict, x: Array, cfg: ArchConfig) -> Array:
     n_chunks = s // chunk
 
     freqs = jnp.asarray(lattice_frequencies(nc.bandwidth, nc.feature_dim))
-    bhat = jnp.asarray(kernel_coefficients(nc.bandwidth, nc.feature_dim,
-                                           nc.sigma))
+    sigma, bhat = _sigma_and_bhat(params, nc)
     qf, kf, v = _features(params, x, cfg)
     # (b, h, n_chunks, chunk, *)
     qf = qf.transpose(0, 2, 1, 3).reshape(b, h, n_chunks, chunk, -1)
@@ -142,7 +168,7 @@ def nfft_attention_forward(params: dict, x: Array, cfg: ArchConfig) -> Array:
     # intra-chunk: exact kernel, causal (diag included: K(0) self-weight)
     diff = qf[..., :, None, :] - kf[..., None, :, :]
     r2 = jnp.sum(diff * diff, -1)
-    w = jnp.exp(-r2 / (nc.sigma ** 2))
+    w = jnp.exp(-r2 / (sigma ** 2))
     causal = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
     w = w * causal
     intra = jnp.einsum("bhcqk,bhcke->bhcqe", w, vc1)
@@ -197,8 +223,7 @@ def nfft_attention_decode(params: dict, x: Array, cfg: ArchConfig,
     b = x.shape[0]
     h, hd = cfg.num_heads, cfg.head_dim_eff
     freqs = jnp.asarray(lattice_frequencies(nc.bandwidth, nc.feature_dim))
-    bhat = jnp.asarray(kernel_coefficients(nc.bandwidth, nc.feature_dim,
-                                           nc.sigma))
+    _, bhat = _sigma_and_bhat(params, nc)
     qf, kf, v = _features(params, x, cfg)  # (b,1,h,*)
     kcos, ksin = phase_features(kf[:, 0], freqs)  # (b,h,L)
     v1 = jnp.concatenate([v[:, 0].astype(jnp.float32),
