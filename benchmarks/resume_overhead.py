@@ -1,0 +1,130 @@
+"""Durable-execution overhead — the resumable-Krylov acceptance gate.
+
+Times `cg` / `eigsh` against their durable drivers (`resumable_solve` /
+`resumable_eigsh`) snapshotting every 25 iterations (the default
+DurablePolicy cadence) on an NFFT fastsum operator, where iteration cost
+dominates — the workload the durable layer exists for.  The acceptance
+criterion is <= 5% wall-clock overhead; this script ASSERTS the gate and
+emits ``BENCH_resume.json`` (path overridable via REPRO_BENCH_RESUME_JSON)
+so CI archives the evidence and future PRs regress against it.
+
+Snapshot writes are asynchronous (the durable driver uses
+``blocking=False``), so the measured overhead is the host device_get of the
+loop state plus segment-boundary sync — not disk latency.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Reporter, quick
+from repro.core import FastsumParams, make_fastsum, make_kernel
+from repro.core.lanczos import eigsh
+from repro.core.solvers import cg
+from repro.runtime import DurablePolicy, resumable_eigsh, resumable_solve
+
+BENCH_JSON = os.environ.get("REPRO_BENCH_RESUME_JSON", "BENCH_resume.json")
+OVERHEAD_GATE_PCT = 5.0
+SNAPSHOT_EVERY = 25
+
+
+def _operator(n: int):
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.uniform(-3.0, 3.0, (n, 2)))
+    kern = make_kernel("gaussian", sigma=2.5)
+    params = FastsumParams(n_bandwidth=32, m=4)
+    gram = make_fastsum(kern, pts, params)
+    beta = 1e-2
+    return lambda x: gram.matvec_tilde(x) + beta * x
+
+
+def _median_time(fn, *, repeats: int) -> float:
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _time_durable(run_fn, *, repeats: int) -> float:
+    """Each durable run gets a FRESH ckpt_dir: resuming a finished solve
+    from its own snapshots would time the restore path, not the solve."""
+    times = []
+    for _ in range(repeats):
+        d = tempfile.mkdtemp(prefix="bench_resume_")
+        try:
+            t0 = time.perf_counter()
+            out = run_fn(d)
+            jax.block_until_ready(out)
+            times.append(time.perf_counter() - t0)
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    return float(np.median(times))
+
+
+def run(report: Reporter | None = None) -> None:
+    rep = report or Reporter("resume_overhead")
+    n = 3000 if quick() else 20_000
+    repeats = 3 if quick() else 5
+    maxiter = 150
+    num_iters = 60
+    policy = DurablePolicy(snapshot_every=SNAPSHOT_EVERY)
+    mv = _operator(n)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal((n, 4)))
+    key = jax.random.PRNGKey(0)
+    results = {"n": n, "snapshot_every": SNAPSHOT_EVERY,
+               "gate_pct": OVERHEAD_GATE_PCT, "cases": {}}
+
+    cases = {
+        "cg": (
+            lambda: cg(mv, b, tol=1e-10, maxiter=maxiter),
+            lambda d: resumable_solve(mv, b, ckpt_dir=d, tol=1e-10,
+                                      maxiter=maxiter, policy=policy)[0],
+        ),
+        "eigsh": (
+            lambda: eigsh(mv, n, 6, key=key, num_iters=num_iters),
+            lambda d: resumable_eigsh(mv, n, 6, ckpt_dir=d, key=key,
+                                      num_iters=num_iters, policy=policy)[0],
+        ),
+    }
+    for name, (plain, durable) in cases.items():
+        plain()  # warm both compile caches before timing
+        _time_durable(durable, repeats=1)
+        t_plain = _median_time(plain, repeats=repeats)
+        t_durable = _time_durable(durable, repeats=repeats)
+        overhead_pct = 100.0 * (t_durable - t_plain) / t_plain
+        rep.add(f"{name}[n={n}]/plain", t_plain, "s")
+        rep.add(f"{name}[n={n}]/durable", t_durable, "s",
+                overhead_pct=round(overhead_pct, 2),
+                snapshot_every=SNAPSHOT_EVERY)
+        results["cases"][name] = {
+            "plain_s": t_plain,
+            "durable_s": t_durable,
+            "overhead_pct": overhead_pct,
+        }
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {BENCH_JSON}")
+
+    for name, case in results["cases"].items():
+        assert case["overhead_pct"] <= OVERHEAD_GATE_PCT, (
+            f"durable {name} overhead {case['overhead_pct']:.2f}% exceeds "
+            f"the {OVERHEAD_GATE_PCT}% acceptance gate "
+            f"(snapshots every {SNAPSHOT_EVERY} iterations)")
+    rep.save()
+
+
+if __name__ == "__main__":
+    run()

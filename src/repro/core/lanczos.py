@@ -54,9 +54,28 @@ class EigshHealth(NamedTuple):
     breakdown_iter: Array  # int32 scalar, == subspace size when clean
 
 
-def lanczos(matvec: Matvec, v0: Array, num_iters: int,
-            *, reorthogonalize: bool = True) -> LanczosResult:
-    """Run ``num_iters`` Lanczos steps from start vector ``v0``."""
+class LanczosLoopState(NamedTuple):
+    """Checkpointable Lanczos iteration state (the ``fori_loop`` carry plus
+    the step index).  ``lanczos_machine`` + segmented ``fori_loop`` runs
+    reproduce :func:`lanczos` bit-identically: the body is a deterministic
+    function of ``(i, carry)`` alone."""
+
+    basis: Array      # (num_iters, n)
+    alphas: Array     # (num_iters,)
+    betas: Array      # (num_iters,)
+    beta_next: Array  # scalar: coupling into the next step
+    breakdown: Array  # scalar int32
+    i: Array          # next step index (scalar int32)
+
+
+def lanczos_machine(matvec: Matvec, v0: Array, num_iters: int,
+                    *, reorthogonalize: bool = True):
+    """Lanczos in resumable form: ``(state0, body, finish)``.
+
+    ``body(i, carry)`` is a ``fori_loop`` body over the 5-tuple carry
+    ``state[:-1]``; running steps ``[i0, i1)`` in any segmentation yields
+    the same trajectory.  ``finish(state)`` wraps a :class:`LanczosResult`.
+    """
     n = v0.shape[0]
     dtype = v0.dtype
     q = v0 / jnp.linalg.norm(v0)
@@ -101,12 +120,29 @@ def lanczos(matvec: Matvec, v0: Array, num_iters: int,
         )
         return basis, alphas, betas, jnp.where(ok, beta, 0.0), breakdown
 
-    basis, alphas, betas, beta_last, breakdown = jax.lax.fori_loop(
-        0, num_iters, body, (basis, alphas, betas, jnp.zeros((), dtype),
-                             jnp.asarray(num_iters, jnp.int32))
-    )
-    return LanczosResult(alphas=alphas, betas=betas, basis=basis,
-                         residual_beta=beta_last, breakdown_iter=breakdown)
+    state0 = LanczosLoopState(
+        basis=basis, alphas=alphas, betas=betas,
+        beta_next=jnp.zeros((), dtype),
+        breakdown=jnp.asarray(num_iters, jnp.int32),
+        i=jnp.zeros((), jnp.int32))
+
+    def finish(state: LanczosLoopState) -> LanczosResult:
+        return LanczosResult(alphas=state.alphas, betas=state.betas,
+                             basis=state.basis,
+                             residual_beta=state.beta_next,
+                             breakdown_iter=state.breakdown)
+
+    return state0, body, finish
+
+
+def lanczos(matvec: Matvec, v0: Array, num_iters: int,
+            *, reorthogonalize: bool = True) -> LanczosResult:
+    """Run ``num_iters`` Lanczos steps from start vector ``v0``."""
+    state0, body, finish = lanczos_machine(
+        matvec, v0, num_iters, reorthogonalize=reorthogonalize)
+    carry = jax.lax.fori_loop(0, num_iters, body, tuple(state0)[:-1])
+    return finish(LanczosLoopState(*carry,
+                                   i=jnp.asarray(num_iters, jnp.int32)))
 
 
 class BlockLanczosResult(NamedTuple):
@@ -117,18 +153,21 @@ class BlockLanczosResult(NamedTuple):
     #   non-finite recurrence; == num_blocks when clean
 
 
-def block_lanczos(matvec: Matvec, v0: Array, num_blocks: int,
-                  *, reorthogonalize: bool = True) -> BlockLanczosResult:
-    """Block Lanczos with block size ``b = v0.shape[1]`` (paper Section 4).
+class BlockLanczosLoopState(NamedTuple):
+    """Checkpointable block-Lanczos iteration state (see
+    :class:`LanczosLoopState`)."""
 
-    Each step applies the operator to a whole (n, b) block — a single fused
-    multi-RHS matvec that amortizes spread/gather — and orthogonalizes with
-    tall-skinny matmuls (MXU-friendly: (s*b, n) @ (n, b)).  Builds
+    basis: Array     # (num_blocks, n, b)
+    a_blocks: Array  # (num_blocks, b, b)
+    b_blocks: Array  # (num_blocks, b, b)
+    resid: Array     # (b, b)
+    breakdown: Array
+    i: Array
 
-        A Q = Q T + Q_{next} B_{next} E_last^T
 
-    with T block-tridiagonal (diagonal blocks A_j, off-diagonal B_j^T/B_j).
-    """
+def block_lanczos_machine(matvec: Matvec, v0: Array, num_blocks: int,
+                          *, reorthogonalize: bool = True):
+    """Block Lanczos in resumable ``(state0, body, finish)`` form."""
     n, b = v0.shape
     dtype = v0.dtype
     q0, _ = jnp.linalg.qr(v0)
@@ -169,24 +208,51 @@ def block_lanczos(matvec: Matvec, v0: Array, num_blocks: int,
         return (basis, a_blocks, b_blocks,
                 jnp.where(ok, r_next, 0.0), breakdown)
 
-    basis, a_blocks, b_blocks, resid, breakdown = jax.lax.fori_loop(
-        0, num_blocks, body,
-        (basis, a_blocks, b_blocks, jnp.zeros((b, b), dtype),
-         jnp.asarray(num_blocks, jnp.int32)))
+    state0 = BlockLanczosLoopState(
+        basis=basis, a_blocks=a_blocks, b_blocks=b_blocks,
+        resid=jnp.zeros((b, b), dtype),
+        breakdown=jnp.asarray(num_blocks, jnp.int32),
+        i=jnp.zeros((), jnp.int32))
 
-    s = num_blocks * b
-    t = jnp.zeros((s, s), dtype=dtype)
-    for j in range(num_blocks):
-        t = jax.lax.dynamic_update_slice(t, a_blocks[j], (j * b, j * b))
-        if j > 0:
-            # A Q_{j-1} = ... + Q_j R_j  =>  lower block (j, j-1) is R_j;
-            # the coupling into the first dead block is zeroed so the
-            # sentinel-masked tail stays decoupled from the valid head
-            bj = jnp.where(j < breakdown, 1.0, 0.0) * b_blocks[j]
-            t = jax.lax.dynamic_update_slice(t, bj.T, ((j - 1) * b, j * b))
-            t = jax.lax.dynamic_update_slice(t, bj, (j * b, (j - 1) * b))
-    return BlockLanczosResult(t_matrix=t, basis=basis, residual_block=resid,
-                              breakdown_iter=breakdown)
+    def finish(state: BlockLanczosLoopState) -> BlockLanczosResult:
+        a_blocks, b_blocks, breakdown = (state.a_blocks, state.b_blocks,
+                                         state.breakdown)
+        s = num_blocks * b
+        t = jnp.zeros((s, s), dtype=dtype)
+        for j in range(num_blocks):
+            t = jax.lax.dynamic_update_slice(t, a_blocks[j], (j * b, j * b))
+            if j > 0:
+                # A Q_{j-1} = ... + Q_j R_j  =>  lower block (j, j-1) is R_j;
+                # the coupling into the first dead block is zeroed so the
+                # sentinel-masked tail stays decoupled from the valid head
+                bj = jnp.where(j < breakdown, 1.0, 0.0) * b_blocks[j]
+                t = jax.lax.dynamic_update_slice(t, bj.T,
+                                                 ((j - 1) * b, j * b))
+                t = jax.lax.dynamic_update_slice(t, bj, (j * b, (j - 1) * b))
+        return BlockLanczosResult(t_matrix=t, basis=state.basis,
+                                  residual_block=state.resid,
+                                  breakdown_iter=breakdown)
+
+    return state0, body, finish
+
+
+def block_lanczos(matvec: Matvec, v0: Array, num_blocks: int,
+                  *, reorthogonalize: bool = True) -> BlockLanczosResult:
+    """Block Lanczos with block size ``b = v0.shape[1]`` (paper Section 4).
+
+    Each step applies the operator to a whole (n, b) block — a single fused
+    multi-RHS matvec that amortizes spread/gather — and orthogonalizes with
+    tall-skinny matmuls (MXU-friendly: (s*b, n) @ (n, b)).  Builds
+
+        A Q = Q T + Q_{next} B_{next} E_last^T
+
+    with T block-tridiagonal (diagonal blocks A_j, off-diagonal B_j^T/B_j).
+    """
+    state0, body, finish = block_lanczos_machine(
+        matvec, v0, num_blocks, reorthogonalize=reorthogonalize)
+    carry = jax.lax.fori_loop(0, num_blocks, body, tuple(state0)[:-1])
+    return finish(BlockLanczosLoopState(
+        *carry, i=jnp.asarray(num_blocks, jnp.int32)))
 
 
 class EigshResult(NamedTuple):
@@ -210,21 +276,31 @@ def _sentinel_mask(t: Array, valid: Array, which: str) -> Array:
     return t + jnp.diag(jnp.where(valid, 0.0, sentinel))
 
 
-def eigsh(matvec: Matvec, n: int, k: int, *, num_iters: int | None = None,
-          which: str = "LA", key: Array | None = None,
-          dtype=jnp.float64, v0: Array | None = None,
-          block_size: int = 1) -> EigshResult:
-    """Largest-/smallest-algebraic eigenpairs of a symmetric operator.
+class EigshSetup(NamedTuple):
+    """Resolved eigsh run configuration.
 
-    ``which``: 'LA' (largest algebraic, the paper's use case for
-    A = D^{-1/2} W D^{-1/2}) or 'SA' (smallest — e.g. for L_s directly).
-
-    ``block_size > 1`` runs block Lanczos: ``num_iters`` still means the
-    Krylov subspace dimension, but the operator is applied to (n, block)
-    batches, so the number of matvec invocations drops by ~``block_size``
-    (the fused fastsum engine executes a block in one spread/FFT/gather
-    pass).  The matvec callable must accept (n, C) input in that case.
+    A deterministic function of the :func:`eigsh` call arguments — shared
+    with the durable driver (:mod:`repro.runtime.durable`) so a resumed run
+    rebuilds the *identical* iteration (same subspace size, same shrunken
+    block, same PRNG-derived start vectors) and only the loop state needs
+    checkpointing.  ``num_blocks == 0`` marks the single-vector path.
     """
+
+    k: int
+    which: str
+    num_iters: int
+    block_size: int
+    num_blocks: int
+    v0: Array
+
+
+def eigsh_setup(n: int, k: int, *, num_iters: int | None = None,
+                which: str = "LA", key: Array | None = None,
+                dtype=jnp.float64, v0: Array | None = None,
+                block_size: int = 1) -> EigshSetup:
+    """Resolve the full eigsh configuration (see :class:`EigshSetup`)."""
+    if which not in ("LA", "SA"):
+        raise ValueError(which)
     if num_iters is None:
         num_iters = min(n, max(2 * k + 20, 30))
     num_iters = min(num_iters, n)
@@ -251,37 +327,47 @@ def eigsh(matvec: Matvec, n: int, k: int, *, num_iters: int | None = None,
                          -(-need // block_size))
         if v0 is None:
             v0 = jax.random.normal(key, (n, block_size), dtype=dtype)
-        res = block_lanczos(matvec, v0, num_blocks)
-        broke = res.breakdown_iter < num_blocks
-        valid = jnp.repeat(jnp.arange(num_blocks) < res.breakdown_iter,
-                           block_size)
-        theta, w = jnp.linalg.eigh(_sentinel_mask(res.t_matrix, valid, which))
-        basis_flat = jnp.moveaxis(res.basis, 1, 0).reshape(
-            n, num_blocks * block_size)
-        if which == "LA":
-            order = jnp.argsort(-theta)[:k]
-        elif which == "SA":
-            order = jnp.argsort(theta)[:k]
-        else:
-            raise ValueError(which)
-        theta_k = theta[order]
-        w_k = w[:, order]
-        vecs = basis_flat @ w_k
-        bottom = w_k[-block_size:, :]  # (b, k) last-block Ritz components
-        bounds = jnp.linalg.norm(res.residual_block @ bottom, axis=0)
-        bounds = jnp.where(broke, jnp.inf, bounds)
-        return EigshResult(eigenvalues=theta_k, eigenvectors=vecs,
-                           residual_bounds=bounds,
-                           num_iters=num_blocks * block_size,
-                           num_matvecs=num_blocks,
-                           health=EigshHealth(
-                               nonfinite=broke,
-                               breakdown_iter=res.breakdown_iter))
+        return EigshSetup(k=k, which=which, num_iters=num_iters,
+                          block_size=block_size, num_blocks=num_blocks,
+                          v0=v0)
 
     if v0 is None:
         v0 = jax.random.normal(key, (n,), dtype=dtype)
+    return EigshSetup(k=k, which=which, num_iters=num_iters, block_size=1,
+                      num_blocks=0, v0=v0)
 
-    res = lanczos(matvec, v0, num_iters)
+
+def ritz_from_block(res: BlockLanczosResult, setup: EigshSetup,
+                    n: int) -> EigshResult:
+    """Ritz extraction from a finished block-Lanczos factorization."""
+    k, which = setup.k, setup.which
+    num_blocks, block_size = setup.num_blocks, setup.block_size
+    broke = res.breakdown_iter < num_blocks
+    valid = jnp.repeat(jnp.arange(num_blocks) < res.breakdown_iter,
+                       block_size)
+    theta, w = jnp.linalg.eigh(_sentinel_mask(res.t_matrix, valid, which))
+    basis_flat = jnp.moveaxis(res.basis, 1, 0).reshape(
+        n, num_blocks * block_size)
+    order = (jnp.argsort(-theta) if which == "LA"
+             else jnp.argsort(theta))[:k]
+    theta_k = theta[order]
+    w_k = w[:, order]
+    vecs = basis_flat @ w_k
+    bottom = w_k[-block_size:, :]  # (b, k) last-block Ritz components
+    bounds = jnp.linalg.norm(res.residual_block @ bottom, axis=0)
+    bounds = jnp.where(broke, jnp.inf, bounds)
+    return EigshResult(eigenvalues=theta_k, eigenvectors=vecs,
+                       residual_bounds=bounds,
+                       num_iters=num_blocks * block_size,
+                       num_matvecs=num_blocks,
+                       health=EigshHealth(
+                           nonfinite=broke,
+                           breakdown_iter=res.breakdown_iter))
+
+
+def ritz_from_lanczos(res: LanczosResult, setup: EigshSetup) -> EigshResult:
+    """Ritz extraction from a finished single-vector Lanczos run."""
+    k, which, num_iters = setup.k, setup.which, setup.num_iters
     broke = res.breakdown_iter < num_iters
     valid = jnp.arange(num_iters) < res.breakdown_iter
     # dead betas (coupling into the first dead step) are zeroed so the
@@ -290,12 +376,8 @@ def eigsh(matvec: Matvec, n: int, k: int, *, num_iters: int | None = None,
     # T_k is (num_iters x num_iters) tridiagonal
     t = jnp.diag(res.alphas) + jnp.diag(off, 1) + jnp.diag(off, -1)
     theta, w = jnp.linalg.eigh(_sentinel_mask(t, valid, which))  # ascending
-    if which == "LA":
-        order = jnp.argsort(-theta)[:k]
-    elif which == "SA":
-        order = jnp.argsort(theta)[:k]
-    else:
-        raise ValueError(which)
+    order = (jnp.argsort(-theta) if which == "LA"
+             else jnp.argsort(theta))[:k]
     theta_k = theta[order]
     w_k = w[:, order]
     vecs = res.basis.T @ w_k  # (n, k)
@@ -306,6 +388,30 @@ def eigsh(matvec: Matvec, n: int, k: int, *, num_iters: int | None = None,
                        num_matvecs=num_iters,
                        health=EigshHealth(nonfinite=broke,
                                           breakdown_iter=res.breakdown_iter))
+
+
+def eigsh(matvec: Matvec, n: int, k: int, *, num_iters: int | None = None,
+          which: str = "LA", key: Array | None = None,
+          dtype=jnp.float64, v0: Array | None = None,
+          block_size: int = 1) -> EigshResult:
+    """Largest-/smallest-algebraic eigenpairs of a symmetric operator.
+
+    ``which``: 'LA' (largest algebraic, the paper's use case for
+    A = D^{-1/2} W D^{-1/2}) or 'SA' (smallest — e.g. for L_s directly).
+
+    ``block_size > 1`` runs block Lanczos: ``num_iters`` still means the
+    Krylov subspace dimension, but the operator is applied to (n, block)
+    batches, so the number of matvec invocations drops by ~``block_size``
+    (the fused fastsum engine executes a block in one spread/FFT/gather
+    pass).  The matvec callable must accept (n, C) input in that case.
+    """
+    setup = eigsh_setup(n, k, num_iters=num_iters, which=which, key=key,
+                        dtype=dtype, v0=v0, block_size=block_size)
+    if setup.num_blocks:
+        res = block_lanczos(matvec, setup.v0, setup.num_blocks)
+        return ritz_from_block(res, setup, n)
+    res = lanczos(matvec, setup.v0, setup.num_iters)
+    return ritz_from_lanczos(res, setup)
 
 
 def eigsh_smallest_laplacian(adjacency_matvec: Matvec, n: int, k: int,

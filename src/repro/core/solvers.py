@@ -270,11 +270,55 @@ def _cg_implicit_bwd(mv_c, pc_c, statics, res, ct):
 _cg_implicit.defvjp(_cg_implicit_fwd, _cg_implicit_bwd)
 
 
-def _cg_plain(matvec: Matvec, b: Array, *, x0: Array | None = None,
-              tol: float = 1e-8, maxiter: int = 1000,
-              preconditioner: Matvec | None = None,
-              stall_window: int = 250) -> SolveResult:
-    """The forward-only CG recurrence (also the implicit VJP's inner solve)."""
+class CGLoopState(NamedTuple):
+    """The complete CG loop state — a checkpointable pytree of arrays.
+
+    Snapshotting this mid-solve and resuming reproduces the exact
+    trajectory of an uninterrupted run: the loop body is a deterministic
+    function of this state alone (the matvec is re-supplied by the caller
+    on restart).  ``b``/``tol_abs``/``rhs_bad`` ride along so the exit path
+    needs nothing beyond the state and the matvec.
+    """
+
+    x: Array
+    r: Array
+    z: Array
+    p: Array
+    rz: Array
+    iters: Array
+    best: Array       # best residual so far (stagnation reference)
+    stall: Array      # consecutive non-improving iterations
+    poisoned: Array   # SolveHealth.nonfinite accumulator
+    stalled: Array    # SolveHealth.stagnated accumulator
+    bad: Array        # SolveHealth.breakdown_iter accumulator
+    i: Array          # global iteration counter (scalar int32)
+    b: Array          # validated right-hand side
+    tol_abs: Array
+    rhs_bad: Array
+
+
+class KrylovMachine(NamedTuple):
+    """A Krylov solve in resumable form: ``state0`` + pure ``cond``/``body``
+    step functions + ``finish``.
+
+    ``while cond(s): s = body(s)`` followed by ``finish(s)`` IS the solver
+    (:func:`cg` / :func:`minres` run exactly this); a driver may instead run
+    the loop in bounded segments, checkpoint the state pytree between them
+    (see :mod:`repro.runtime.durable`), and still produce a bit-identical
+    trajectory.
+    """
+
+    state: NamedTuple
+    cond: Callable
+    body: Callable
+    finish: Callable
+
+
+def cg_machine(matvec: Matvec, b: Array, *, x0: Array | None = None,
+               tol: float = 1e-8, maxiter: int = 1000,
+               preconditioner: Matvec | None = None,
+               stall_window: int = 250) -> KrylovMachine:
+    """CG as a resumable machine (state pytree: :class:`CGLoopState`)."""
     matvec, b, x0, preconditioner, batched = _as_columns(
         matvec, b, x0, preconditioner)
     rhs_bad, b, x0 = _validate_rhs(b, x0)
@@ -290,23 +334,26 @@ def _cg_plain(matvec: Matvec, b: Array, *, x0: Array | None = None,
     resn0 = _col_norms(r)
     tol_abs = tol * jnp.maximum(_col_norms(b), 1.0)  # (C,)
     cshape = tol_abs.shape
-    iters0 = jnp.zeros(cshape, jnp.int32)
-    guards0 = (resn0,  # best residual so far
-               jnp.zeros(cshape, jnp.int32),   # stall counter
-               jnp.zeros(cshape, bool),        # poisoned (non-finite)
-               jnp.zeros(cshape, bool),        # stagnated
-               jnp.full(cshape, -1, jnp.int32))  # breakdown_iter
+    state0 = CGLoopState(
+        x=x, r=r, z=z, p=p, rz=rz,
+        iters=jnp.zeros(cshape, jnp.int32),
+        best=resn0,  # best residual so far
+        stall=jnp.zeros(cshape, jnp.int32),
+        poisoned=jnp.zeros(cshape, bool),
+        stalled=jnp.zeros(cshape, bool),
+        bad=jnp.full(cshape, -1, jnp.int32),
+        i=jnp.zeros((), jnp.int32),
+        b=b, tol_abs=tol_abs, rhs_bad=rhs_bad)
 
-    def cond(state):
-        x, r, z, p, rz, iters, (best, stall, poisoned, stalled, bad), i = \
-            state
-        alive = (_col_norms(r) > tol_abs) & ~poisoned & ~stalled
-        return jnp.logical_and(i < maxiter, jnp.any(alive))
+    def cond(s: CGLoopState):
+        alive = (_col_norms(s.r) > s.tol_abs) & ~s.poisoned & ~s.stalled
+        return jnp.logical_and(s.i < maxiter, jnp.any(alive))
 
-    def body(state):
-        x, r, z, p, rz, iters, (best, stall, poisoned, stalled, bad), i = \
-            state
-        active = (_col_norms(r) > tol_abs) & ~poisoned & ~stalled  # (C,)
+    def body(s: CGLoopState):
+        x, r, z, p, rz = s.x, s.r, s.z, s.p, s.rz
+        best, stall, poisoned, stalled, bad = (
+            s.best, s.stall, s.poisoned, s.stalled, s.bad)
+        active = (_col_norms(r) > s.tol_abs) & ~poisoned & ~stalled  # (C,)
         ap = matvec(p)
         denom = _col_dot(p, ap)
         alpha = rz / jnp.where(denom != 0, denom, 1.0)
@@ -328,7 +375,7 @@ def _cg_plain(matvec: Matvec, b: Array, *, x0: Array | None = None,
         upd = active & ok
         trip = active & ~ok
         poisoned = poisoned | trip
-        bad = jnp.where(trip & (bad < 0), i, bad)
+        bad = jnp.where(trip & (bad < 0), s.i, bad)
         sel = lambda new, old: jnp.where(upd[None, :], new, old)
         x, r, z, p = (sel(x_new, x), sel(r_new, r), sel(z_new, z),
                       sel(p_new, p))
@@ -342,28 +389,59 @@ def _cg_plain(matvec: Matvec, b: Array, *, x0: Array | None = None,
         stall = jnp.where(upd & ~improved, stall + 1, 0)
         if stall_window:
             stalled = stalled | (stall >= stall_window)
-        return (x, r, z, p, rz, iters + active,
-                (best, stall, poisoned, stalled, bad), i + 1)
+        return CGLoopState(
+            x=x, r=r, z=z, p=p, rz=rz, iters=s.iters + active,
+            best=best, stall=stall, poisoned=poisoned, stalled=stalled,
+            bad=bad, i=s.i + 1, b=s.b, tol_abs=s.tol_abs,
+            rhs_bad=s.rhs_bad)
 
-    x, r, z, p, rz, iters, (best, stall, poisoned, stalled, bad), _ = \
-        jax.lax.while_loop(cond, body, (x, r, z, p, rz, iters0, guards0,
-                                        jnp.zeros((), jnp.int32)))
-    return _finish(matvec, b, x, tol_abs, iters, rhs_bad, poisoned,
-                   stalled, bad, batched)
+    def finish(s: CGLoopState) -> SolveResult:
+        return _finish(matvec, s.b, s.x, s.tol_abs, s.iters, s.rhs_bad,
+                       s.poisoned, s.stalled, s.bad, batched)
+
+    return KrylovMachine(state=state0, cond=cond, body=body, finish=finish)
 
 
-def minres(matvec: Matvec, b: Array, *, x0: Array | None = None,
-           tol: float = 1e-8, maxiter: int = 1000,
-           stall_window: int = 250) -> SolveResult:
-    """MINRES for symmetric (possibly indefinite) operators.
+def _cg_plain(matvec: Matvec, b: Array, *, x0: Array | None = None,
+              tol: float = 1e-8, maxiter: int = 1000,
+              preconditioner: Matvec | None = None,
+              stall_window: int = 250) -> SolveResult:
+    """The forward-only CG recurrence (also the implicit VJP's inner solve)."""
+    m = cg_machine(matvec, b, x0=x0, tol=tol, maxiter=maxiter,
+                   preconditioner=preconditioner, stall_window=stall_window)
+    return m.finish(jax.lax.while_loop(m.cond, m.body, m.state))
 
-    Batched ``b`` (n, C) runs per-column Lanczos + Givens recurrences in
-    lockstep (all scalar recurrence state becomes (C,)-shaped); a frozen
-    column — converged, poisoned, or stagnated — stops updating its whole
-    recurrence (iterate *and* Lanczos state), so a non-finite column can
-    never leak into its siblings.  Guard flags land in ``result.health``;
-    ``stall_window=0`` disables stagnation detection.
-    """
+
+class MinresLoopState(NamedTuple):
+    """The complete MINRES loop state (see :class:`CGLoopState`)."""
+
+    x: Array
+    v: Array
+    v_prev: Array
+    w: Array
+    w_prev: Array
+    phi_bar: Array
+    delta1: Array
+    eps_k: Array
+    cs: Array
+    sn: Array
+    beta: Array
+    iters: Array
+    best: Array
+    stall: Array
+    poisoned: Array
+    stalled: Array
+    bad: Array
+    i: Array
+    b: Array
+    tol_abs: Array
+    rhs_bad: Array
+
+
+def minres_machine(matvec: Matvec, b: Array, *, x0: Array | None = None,
+                   tol: float = 1e-8, maxiter: int = 1000,
+                   stall_window: int = 250) -> KrylovMachine:
+    """MINRES as a resumable machine (state: :class:`MinresLoopState`)."""
     matvec, b, x0, _, batched = _as_columns(matvec, b, x0, None)
     rhs_bad, b, x0 = _validate_rhs(b, x0)
     if x0 is None:
@@ -388,23 +466,30 @@ def minres(matvec: Matvec, b: Array, *, x0: Array | None = None,
     cs = -jnp.ones(cshape, dtype)
     sn = jnp.zeros(cshape, dtype)
     beta = beta1
-    iters0 = jnp.zeros(cshape, jnp.int32)
-    guards0 = (beta1,  # best |phi_bar| so far
-               jnp.zeros(cshape, jnp.int32),   # stall counter
-               jnp.zeros(cshape, bool),        # poisoned (non-finite)
-               jnp.zeros(cshape, bool),        # stagnated
-               jnp.full(cshape, -1, jnp.int32))  # breakdown_iter
+    state0 = MinresLoopState(
+        x=x, v=v, v_prev=v_prev, w=w, w_prev=w_prev, phi_bar=phi_bar,
+        delta1=delta1, eps_k=eps_k, cs=cs, sn=sn, beta=beta,
+        iters=jnp.zeros(cshape, jnp.int32),
+        best=beta1,  # best |phi_bar| so far
+        stall=jnp.zeros(cshape, jnp.int32),
+        poisoned=jnp.zeros(cshape, bool),
+        stalled=jnp.zeros(cshape, bool),
+        bad=jnp.full(cshape, -1, jnp.int32),
+        i=jnp.zeros((), jnp.int32),
+        b=b, tol_abs=tol_abs, rhs_bad=rhs_bad)
 
-    def cond(state):
-        (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta,
-         iters, (best, stall, poisoned, stalled, bad), i) = state
-        alive = (jnp.abs(phi_bar) > tol_abs) & ~poisoned & ~stalled
-        return jnp.logical_and(i < maxiter, jnp.any(alive))
+    def cond(s: MinresLoopState):
+        alive = (jnp.abs(s.phi_bar) > s.tol_abs) & ~s.poisoned & ~s.stalled
+        return jnp.logical_and(s.i < maxiter, jnp.any(alive))
 
-    def body(state):
-        (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta,
-         iters, (best, stall, poisoned, stalled, bad), i) = state
-        active = (jnp.abs(phi_bar) > tol_abs) & ~poisoned & ~stalled  # (C,)
+    def body(s: MinresLoopState):
+        (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta) = (
+            s.x, s.v, s.v_prev, s.w, s.w_prev, s.phi_bar, s.delta1,
+            s.eps_k, s.cs, s.sn, s.beta)
+        best, stall, poisoned, stalled, bad = (
+            s.best, s.stall, s.poisoned, s.stalled, s.bad)
+        i = s.i
+        active = (jnp.abs(phi_bar) > s.tol_abs) & ~poisoned & ~stalled
         av = matvec(v)
         alpha = _col_dot(v, av).astype(dtype)
         av = av - alpha * v - beta * v_prev
@@ -455,16 +540,35 @@ def minres(matvec: Matvec, b: Array, *, x0: Array | None = None,
         stall = jnp.where(upd & ~improved, stall + 1, 0)
         if stall_window:
             stalled = stalled | (stall >= stall_window)
-        return (x2, v2, vp2, w2, wp2, phi_bar, delta1, eps_k, cs, sn, beta,
-                iters + active, (best, stall, poisoned, stalled, bad), i + 1)
+        return MinresLoopState(
+            x=x2, v=v2, v_prev=vp2, w=w2, w_prev=wp2, phi_bar=phi_bar,
+            delta1=delta1, eps_k=eps_k, cs=cs, sn=sn, beta=beta,
+            iters=s.iters + active, best=best, stall=stall,
+            poisoned=poisoned, stalled=stalled, bad=bad, i=i + 1,
+            b=s.b, tol_abs=s.tol_abs, rhs_bad=s.rhs_bad)
 
-    init = (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta,
-            iters0, guards0, jnp.zeros((), jnp.int32))
-    (x, v, v_prev, w, w_prev, phi_bar, delta1, eps_k, cs, sn, beta, iters,
-     (best, stall, poisoned, stalled, bad), _) = jax.lax.while_loop(
-        cond, body, init)
-    return _finish(matvec, b, x, tol_abs, iters, rhs_bad, poisoned,
-                   stalled, bad, batched)
+    def finish(s: MinresLoopState) -> SolveResult:
+        return _finish(matvec, s.b, s.x, s.tol_abs, s.iters, s.rhs_bad,
+                       s.poisoned, s.stalled, s.bad, batched)
+
+    return KrylovMachine(state=state0, cond=cond, body=body, finish=finish)
+
+
+def minres(matvec: Matvec, b: Array, *, x0: Array | None = None,
+           tol: float = 1e-8, maxiter: int = 1000,
+           stall_window: int = 250) -> SolveResult:
+    """MINRES for symmetric (possibly indefinite) operators.
+
+    Batched ``b`` (n, C) runs per-column Lanczos + Givens recurrences in
+    lockstep (all scalar recurrence state becomes (C,)-shaped); a frozen
+    column — converged, poisoned, or stagnated — stops updating its whole
+    recurrence (iterate *and* Lanczos state), so a non-finite column can
+    never leak into its siblings.  Guard flags land in ``result.health``;
+    ``stall_window=0`` disables stagnation detection.
+    """
+    m = minres_machine(matvec, b, x0=x0, tol=tol, maxiter=maxiter,
+                       stall_window=stall_window)
+    return m.finish(jax.lax.while_loop(m.cond, m.body, m.state))
 
 
 # ---------------------------------------------------------------------------

@@ -2,14 +2,19 @@
 
 ``repro.runtime`` is the layer that makes the fast paths *safe to trust* in
 production: the paper's Lemma 3.1 a-posteriori error bound consulted live
-(with automatic bandwidth escalation and a dense-fallback floor), and
-seeded chaos injectors for driving the solve/serve stack through failures
-in tests.  See ``guards`` and ``faultinject``.
+(with automatic bandwidth escalation and a dense-fallback floor), durable
+(preemption-safe, snapshot-resumable) Krylov drivers, and seeded chaos
+injectors for driving the solve/serve stack through failures in tests.
+See ``guards``, ``durable``, and ``faultinject``.
 """
 
+from repro.runtime.durable import (
+    DurablePolicy, DurableReport, resumable_eigsh, resumable_solve,
+)
 from repro.runtime.faultinject import (
-    TickChaos, chaos_schedule, corrupt_group_plan, nan_poison_grid,
-    poison_bank_member, poison_columns, poison_registry_grids, SlowMatvec,
+    KillPoint, KillSchedule, Preemption, TickChaos, chaos_schedule,
+    corrupt_group_plan, nan_poison_grid, poison_bank_member, poison_columns,
+    poison_registry_grids, SlowMatvec,
 )
 from repro.runtime.guards import (
     DirectKernelOperator, GuardPolicy, GuardReport, ProbeReport,
@@ -18,8 +23,13 @@ from repro.runtime.guards import (
 
 __all__ = [
     "DirectKernelOperator",
+    "DurablePolicy",
+    "DurableReport",
     "GuardPolicy",
     "GuardReport",
+    "KillPoint",
+    "KillSchedule",
+    "Preemption",
     "ProbeReport",
     "SlowMatvec",
     "TickChaos",
@@ -32,4 +42,6 @@ __all__ = [
     "poison_columns",
     "poison_registry_grids",
     "probe_fastsum",
+    "resumable_eigsh",
+    "resumable_solve",
 ]

@@ -1,0 +1,285 @@
+"""Durable execution: preemption-safe Krylov solves with exactly-once replay.
+
+The paper's workloads are long-iteration by construction — hundreds of
+Lanczos/CG steps per spectrum or SSL solve — and a preempted process used
+to restart them from iteration 0.  This module is the Krylov analogue of
+:func:`repro.training.fault_tolerance.run_resilient`: the solvers expose
+their complete loop state as a checkpointable pytree
+(:class:`~repro.core.solvers.CGLoopState`,
+:class:`~repro.core.solvers.MinresLoopState`,
+:class:`~repro.core.lanczos.LanczosLoopState`,
+:class:`~repro.core.lanczos.BlockLanczosLoopState` — iterate, residual and
+search directions, Lanczos basis + tridiagonal blocks, per-column
+convergence/quarantine masks, SolveHealth counters), and the drivers here
+run the loop in bounded segments, snapshotting the state through the
+:mod:`repro.training.checkpoint` API every ``snapshot_every`` iterations.
+
+Contract:
+
+* **bit-identical trajectories** — the loop bodies are deterministic
+  functions of the state pytree alone, and segmenting a
+  ``while_loop``/``fori_loop`` does not change the sequence of body
+  applications, so a run killed at any iteration and resumed from its
+  latest snapshot produces the same iterates (and hence the same
+  eigenvalues / solutions) as an uninterrupted run;
+* **exactly-once in effect** — at most ``snapshot_every`` iterations are
+  re-executed on restart, and re-executed iterations reproduce the
+  originals exactly (the replay is idempotent);
+* **crash-safe snapshots** — the checkpoint layer's atomic rename, per-leaf
+  CRC32 checksums, and :func:`~repro.training.checkpoint.
+  restore_latest_valid` fallback mean a snapshot torn or bit-flipped by the
+  crash costs one snapshot interval of progress, never a wrong answer;
+* **restart-storm bounded** — in-process restarts (injected preemptions)
+  are capped by ``max_restarts`` with exponential backoff, mirroring
+  ``run_resilient``; a cross-process resume is simply calling the same
+  function again with the same arguments and ``ckpt_dir``.
+
+PRNG determinism: :func:`resumable_eigsh` derives its start vectors through
+:func:`~repro.core.lanczos.eigsh_setup` from the caller's ``key`` — the
+same resolution :func:`~repro.core.lanczos.eigsh` uses — so a resumed run
+rebuilds identical start vectors without checkpointing the key itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lanczos as _lanczos
+from repro.core import solvers as _solvers
+from repro.core.lanczos import (
+    BlockLanczosLoopState, EigshResult, LanczosLoopState,
+    block_lanczos_machine, eigsh_setup, lanczos_machine, ritz_from_block,
+    ritz_from_lanczos,
+)
+from repro.core.solvers import KrylovMachine, SolveResult
+from repro.training import checkpoint as ckpt
+from repro.training.fault_tolerance import InjectedFault
+
+Array = jax.Array
+log = logging.getLogger("repro.durable")
+
+
+@dataclasses.dataclass(frozen=True)
+class DurablePolicy:
+    """Snapshot cadence + restart discipline for the durable drivers.
+
+    ``snapshot_every`` counts *operator applications* (CG/MINRES/Lanczos
+    iterations; block-Lanczos block steps).  ``keep`` snapshots stay on
+    disk so a corrupted latest snapshot still has an intact predecessor.
+    ``max_restarts`` bounds in-process restart storms; restart ``r`` sleeps
+    ``backoff_base_s * 2**(r-1)`` (capped at ``backoff_max_s``) before
+    restoring, so a crash-looping fault cannot spin the host.
+    """
+
+    snapshot_every: int = 25
+    keep: int = 2
+    max_restarts: int = 10
+    backoff_base_s: float = 0.0
+    backoff_max_s: float = 30.0
+
+
+@dataclasses.dataclass
+class DurableReport:
+    """What the durable driver did for one logical solve."""
+
+    resumed_from: Optional[int]  # snapshot iteration resumed from, or None
+    snapshots: int = 0           # snapshots written by this run
+    segments: int = 0            # loop segments executed
+    restarts: int = 0            # in-process restarts absorbed
+    final_iteration: int = 0
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _advance_while(cond, body, steps, state):
+    """Run ``body`` while ``cond`` holds, at most ``steps`` more iterations.
+
+    The loop body is the *same* callable the plain solver runs, so the
+    segmented trajectory is the uninterrupted trajectory.
+    """
+    limit = state.i + steps
+    return jax.lax.while_loop(
+        lambda s: jnp.logical_and(cond(s), s.i < limit), body, state)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _advance_fori(body, i0, i1, carry):
+    return jax.lax.fori_loop(i0, i1, body, carry)
+
+
+def _drive(state0, advance: Callable, done: Callable, ckpt_dir: str,
+           policy: DurablePolicy,
+           fault_hook: Optional[Callable[[int], None]]):
+    """Segment/snapshot/restart loop shared by both drivers.
+
+    ``advance(state) -> state`` runs one bounded segment; ``done(state)``
+    says whether the loop condition is exhausted; ``fault_hook(iteration)``
+    is the preemption kill-point seam (raises
+    :class:`~repro.training.fault_tolerance.InjectedFault` to simulate a
+    kill — a real SIGKILL is recovered by simply calling the durable
+    function again, which lands in the same restore path).
+    """
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state0)
+    start, restored = ckpt.restore_latest_valid(ckpt_dir, abstract)
+    report = DurableReport(resumed_from=start)
+    state = state0 if start is None else restored
+    if start is not None:
+        log.info("resumed solve from snapshot at iteration %d", start)
+    pending = None
+    while True:
+        try:
+            if fault_hook is not None:
+                fault_hook(int(jax.device_get(state.i)))
+            if bool(jax.device_get(done(state))):
+                break
+            state = advance(state)
+            report.segments += 1
+            it = int(jax.device_get(state.i))
+            pending = ckpt.save_checkpoint(ckpt_dir, it, state,
+                                           blocking=False, keep=policy.keep)
+            report.snapshots += 1
+        except InjectedFault as e:
+            report.restarts += 1
+            if pending is not None:
+                pending.join()  # let any in-flight snapshot land
+            if report.restarts > policy.max_restarts:
+                raise
+            if policy.backoff_base_s:
+                delay = min(
+                    policy.backoff_base_s * 2 ** (report.restarts - 1),
+                    policy.backoff_max_s)
+                log.warning("preempted (%s); backing off %.3fs before "
+                            "restart %d", e, delay, report.restarts)
+                time.sleep(delay)
+            start, restored = ckpt.restore_latest_valid(ckpt_dir, abstract)
+            state = state0 if start is None else restored
+    if pending is not None:
+        pending.join()
+    report.final_iteration = int(jax.device_get(state.i))
+    return state, report
+
+
+def _machine_done(machine: KrylovMachine):
+    return lambda s: jnp.logical_not(machine.cond(s))
+
+
+def _resumable_columns(matvec, b, *, ckpt_dir, method, x0, tol, maxiter,
+                       preconditioner, stall_window, policy, fault_hook):
+    if method == "cg":
+        machine = _solvers.cg_machine(
+            matvec, b, x0=x0, tol=tol, maxiter=maxiter,
+            preconditioner=preconditioner, stall_window=stall_window)
+    elif method == "minres":
+        if preconditioner is not None:
+            raise ValueError("minres does not take a preconditioner")
+        machine = _solvers.minres_machine(
+            matvec, b, x0=x0, tol=tol, maxiter=maxiter,
+            stall_window=stall_window)
+    else:
+        raise ValueError(f"method must be 'cg' or 'minres', got {method!r}")
+
+    def advance(state):
+        return _advance_while(machine.cond, machine.body,
+                              policy.snapshot_every, state)
+
+    final, report = _drive(machine.state, advance, _machine_done(machine),
+                           ckpt_dir, policy, fault_hook)
+    return machine.finish(final), report
+
+
+def resumable_solve(matvec, b: Array, *, ckpt_dir: str, method: str = "cg",
+                    bank: bool = False, x0: Array | None = None,
+                    tol: float = 1e-8, maxiter: int = 1000,
+                    preconditioner=None, stall_window: int = 250,
+                    policy: DurablePolicy | None = None,
+                    fault_hook: Optional[Callable[[int], None]] = None,
+                    ) -> tuple[SolveResult, DurableReport]:
+    """Preemption-safe :func:`~repro.core.solvers.cg` /
+    :func:`~repro.core.solvers.minres` (and their lockstep bank flavors).
+
+    Runs the solver loop in ``policy.snapshot_every``-iteration segments,
+    snapshotting the full loop state into ``ckpt_dir`` between segments.
+    Killed and re-invoked (same arguments, same ``ckpt_dir``), it resumes
+    from the latest intact snapshot and produces the bit-identical
+    trajectory of an uninterrupted run; at most one snapshot interval is
+    re-executed.  ``bank=True`` treats ``b`` as (S, n) / (S, n, C) with a
+    bank matvec — the :func:`~repro.core.solvers.cg_bank` layout — so an
+    entire hyperparameter sweep becomes one durable solve.
+
+    Returns ``(SolveResult, DurableReport)``.  Delete ``ckpt_dir`` (or use
+    a fresh one) to start a new logical solve; a stale snapshot from a
+    different problem shape is rejected by the checkpoint validators and
+    the solve starts fresh.
+    """
+    policy = policy or DurablePolicy()
+    if bank:
+        cell = {}
+
+        def solver(flat_mv, bflat, x0=None, **kw):
+            res, rep = _resumable_columns(
+                flat_mv, bflat, ckpt_dir=ckpt_dir, method=method, x0=x0,
+                preconditioner=preconditioner, policy=policy,
+                fault_hook=fault_hook, **kw)
+            cell["report"] = rep
+            return res
+
+        sol = _solvers._bank_solve(
+            solver, matvec, b, x0,
+            dict(tol=tol, maxiter=maxiter, stall_window=stall_window))
+        return sol, cell["report"]
+    return _resumable_columns(
+        matvec, b, ckpt_dir=ckpt_dir, method=method, x0=x0, tol=tol,
+        maxiter=maxiter, preconditioner=preconditioner,
+        stall_window=stall_window, policy=policy, fault_hook=fault_hook)
+
+
+def resumable_eigsh(matvec, n: int, k: int, *, ckpt_dir: str,
+                    num_iters: int | None = None, which: str = "LA",
+                    key: Array | None = None, dtype=jnp.float64,
+                    v0: Array | None = None, block_size: int = 1,
+                    policy: DurablePolicy | None = None,
+                    fault_hook: Optional[Callable[[int], None]] = None,
+                    ) -> tuple[EigshResult, DurableReport]:
+    """Preemption-safe :func:`~repro.core.lanczos.eigsh`.
+
+    The (block-)Lanczos factorization — the dominant cost — runs in
+    snapshot-bounded segments; the Ritz extraction happens once, after the
+    factorization completes.  Start vectors are re-derived from ``key``
+    through the same :func:`~repro.core.lanczos.eigsh_setup` resolution
+    ``eigsh`` uses, so a resumed run continues the identical iteration.
+    Returns ``(EigshResult, DurableReport)``.
+    """
+    policy = policy or DurablePolicy()
+    setup = eigsh_setup(n, k, num_iters=num_iters, which=which, key=key,
+                        dtype=dtype, v0=v0, block_size=block_size)
+    if setup.num_blocks:
+        state0, body, finish = block_lanczos_machine(
+            matvec, setup.v0, setup.num_blocks)
+        total, state_cls = setup.num_blocks, BlockLanczosLoopState
+    else:
+        state0, body, finish = lanczos_machine(
+            matvec, setup.v0, setup.num_iters)
+        total, state_cls = setup.num_iters, LanczosLoopState
+
+    def advance(state):
+        i1 = jnp.minimum(state.i + policy.snapshot_every,
+                         jnp.asarray(total, jnp.int32))
+        carry = _advance_fori(body, state.i, i1, tuple(state)[:-1])
+        return state_cls(*carry, i=i1)
+
+    def done(state):
+        return state.i >= total
+
+    final, report = _drive(state0, advance, done, ckpt_dir, policy,
+                           fault_hook)
+    res = finish(final)
+    if setup.num_blocks:
+        return ritz_from_block(res, setup, n), report
+    return ritz_from_lanczos(res, setup), report

@@ -29,7 +29,59 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.training.fault_tolerance import InjectedFault
+
 Array = jax.Array
+
+
+class Preemption(InjectedFault):
+    """A simulated process kill (SIGKILL/preemption) at a host sync point."""
+
+
+@dataclasses.dataclass
+class KillPoint:
+    """Deterministic preemption injector for the durable drivers.
+
+    Passed as ``fault_hook`` to :func:`repro.runtime.durable.resumable_solve`
+    / :func:`~repro.runtime.durable.resumable_eigsh` (or
+    :func:`repro.training.fault_tolerance.run_resilient`): raises
+    :class:`Preemption` the first ``kills`` times the driver's iteration
+    counter reaches ``at_iteration``.  Because the hook fires at segment
+    boundaries — the host sync points where a real kill would lose in-flight
+    work — the driver loses exactly the un-snapshotted tail, the scenario
+    the resume contract must survive.
+    """
+
+    at_iteration: int
+    kills: int = 1
+    fired: int = 0
+
+    def __call__(self, i: int) -> None:
+        if self.fired < self.kills and i >= self.at_iteration:
+            self.fired += 1
+            raise Preemption(
+                f"injected preemption at iteration {i} "
+                f"(kill {self.fired}/{self.kills})")
+
+
+@dataclasses.dataclass
+class KillSchedule:
+    """Multiple kill-points in one run (a preemption storm).
+
+    ``at_iterations`` is consumed in order: each entry fires once, when the
+    driver's counter first reaches it.
+    """
+
+    at_iterations: tuple
+    next_idx: int = 0
+
+    def __call__(self, i: int) -> None:
+        if (self.next_idx < len(self.at_iterations)
+                and i >= self.at_iterations[self.next_idx]):
+            self.next_idx += 1
+            raise Preemption(
+                f"injected preemption at iteration {i} "
+                f"(kill {self.next_idx}/{len(self.at_iterations)})")
 
 
 # ---------------------------------------------------------------------------

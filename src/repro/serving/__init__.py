@@ -2,10 +2,14 @@
 
 ``engine`` is the token-LM prefill+decode engine; ``graph`` is the
 graph-predict tier (batched NFFT kernel predictions for multi-tenant KRR
-models — see the README "Serving" section).
+models — see the README "Serving" section); ``journal`` makes the graph
+registry durable (checksummed append-only journal + warm-restart replay).
 """
 
 from repro.serving.engine import ServeEngine, Request  # noqa: F401
 from repro.serving.graph import (  # noqa: F401
     GraphModelRegistry, GraphServeEngine, PredictRequest, TickStats,
+)
+from repro.serving.journal import (  # noqa: F401
+    RecoveryReport, RegistryJournal, recover_registry,
 )

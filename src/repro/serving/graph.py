@@ -51,6 +51,7 @@ cooldown.  Deterministic fault injection hooks in via
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import queue
 import threading
@@ -163,10 +164,16 @@ class GraphModelRegistry:
     (the engine tick loop and an enqueue/registration thread may interleave).
     """
 
-    def __init__(self, *, grid_cache_slots: int = 32):
+    def __init__(self, *, grid_cache_slots: int = 32, journal=None):
+        """``journal`` is an optional :class:`~repro.serving.journal.
+        RegistryJournal`: every registration/eviction appends one
+        checksummed record, making the registry warm-restartable via
+        :func:`~repro.serving.journal.recover_registry`."""
         self._groups: dict[tuple, _TenantGroup] = {}
         self._model_group: dict[str, _TenantGroup] = {}
         self._lock = threading.Lock()
+        self._journal = journal
+        self._journal_local = threading.local()
         self.grid_cache_slots = grid_cache_slots
         self.counters = {
             "plan_builds": 0,        # PredictionPlan constructions
@@ -178,6 +185,28 @@ class GraphModelRegistry:
             "group_rebuilds": 0,     # corrupted-plan group rebuilds
         }
 
+    # -- journal plumbing ----------------------------------------------------
+    def attach_journal(self, journal) -> None:
+        """Journal future registrations/evictions (recovery replay attaches
+        the journal only *after* replay, so replay re-appends nothing)."""
+        self._journal = journal
+
+    @contextlib.contextmanager
+    def _suppress_journal(self):
+        """Internal re-registrations (group rebuilds, evictions of group
+        siblings) must not append duplicate journal records."""
+        prev = getattr(self._journal_local, "suppress", False)
+        self._journal_local.suppress = True
+        try:
+            yield
+        finally:
+            self._journal_local.suppress = prev
+
+    def _journal_append(self, record: dict) -> None:
+        if (self._journal is not None
+                and not getattr(self._journal_local, "suppress", False)):
+            self._journal.append(record)
+
     def register(self, model_id: str, model: KRRModel, *,
                  domain_points: Optional[Array] = None,
                  margin: float = 0.5) -> None:
@@ -186,7 +215,14 @@ class GraphModelRegistry:
         Models fitted on the same training points (same content, params,
         and declared domain) join one tenant group and share its
         prediction plan; only the model's spectral multiplier is built.
+        With a journal attached, the registration is made durable *before*
+        it becomes servable.
         """
+        if self._journal is not None and not getattr(
+                self._journal_local, "suppress", False):
+            from repro.serving import journal as journal_mod
+            self._journal.append(journal_mod.register_record(
+                model_id, model, domain_points=domain_points, margin=margin))
         with self._lock:
             gkey = (points_fingerprint(model.train_points), model.params,
                     None if domain_points is None
@@ -206,6 +242,31 @@ class GraphModelRegistry:
             self.counters["multiplier_builds"] += 1
             group.add(model_id, model, mult)
             self._model_group[model_id] = group
+
+    def unregister(self, model_id: str) -> bool:
+        """Evict a model from serving (journaled as an eviction record).
+
+        The multiplier stack and grid cache are group-shared, so eviction
+        rebuilds the tenant group from its *remaining* models — same
+        recovery path as :meth:`rebuild_group`; sibling grids re-derive
+        lazily.  Returns False when the model is unknown."""
+        with self._lock:
+            group = self._model_group.get(model_id)
+            if group is None:
+                return False
+            survivors = [(mid, e) for mid, e in group.entries.items()
+                         if mid != model_id]
+            domain_points, margin = group.domain_args
+            self._groups.pop(group.gkey, None)
+            for mid in list(group.entries):
+                self._model_group.pop(mid, None)
+        from repro.serving import journal as journal_mod
+        self._journal_append(journal_mod.unregister_record(model_id))
+        with self._suppress_journal():  # siblings are already journaled
+            for mid, entry in survivors:
+                self.register(mid, entry.model, domain_points=domain_points,
+                              margin=margin)
+        return True
 
     def group_of(self, model_id: str) -> Optional[_TenantGroup]:
         with self._lock:
@@ -267,9 +328,10 @@ class GraphModelRegistry:
             for mid, _ in items:
                 self._model_group.pop(mid, None)
             self.counters["group_rebuilds"] += 1
-        for mid, entry in items:  # register() takes the lock itself
-            self.register(mid, entry.model, domain_points=domain_points,
-                          margin=margin)
+        with self._suppress_journal():  # a rebuild is not a new registration
+            for mid, entry in items:  # register() takes the lock itself
+                self.register(mid, entry.model, domain_points=domain_points,
+                              margin=margin)
         return True
 
     # -- grid cache ---------------------------------------------------------

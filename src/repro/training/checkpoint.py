@@ -1,24 +1,37 @@
 """Checkpointing: leaf-per-file pytree snapshots with an atomic manifest.
 
 Format (``<dir>/step_<n>/``):
-    manifest.json   — tree structure, leaf paths, shapes, dtypes, step
+    manifest.json   — tree structure, leaf paths, shapes, dtypes, per-leaf
+                      CRC32 checksums, step, writer process layout
     leaf_<i>.npy    — one array per leaf (host-gathered)
 
 Properties needed for fault tolerance at scale:
   * **atomic**: written to ``step_<n>.tmp`` then ``os.rename``d — a crash
-    mid-write never corrupts the latest checkpoint;
+    mid-write never corrupts the latest checkpoint; orphaned ``.tmp``
+    directories left by a killed writer are swept by later saves;
   * **async**: ``save_checkpoint(..., blocking=False)`` snapshots to host
     memory synchronously (cheap) and writes in a daemon thread so the train
     loop keeps stepping;
   * **elastic**: ``restore_checkpoint(..., shardings=...)`` re-device_puts
     onto *any* mesh — restarting 512-chip training on 256 chips (or a
-    different DP/TP split) is a restore with different shardings.
+    different DP/TP split) is a restore with different shardings;
+  * **checksummed**: every leaf carries a CRC32 in the manifest; restore
+    verifies it, so a truncated or bit-flipped leaf raises
+    :class:`CheckpointCorruptionError` instead of restoring garbage, and
+    :func:`restore_latest_valid` falls back to the newest *intact* step;
+  * **multi-host**: leaves are partitioned round-robin over processes
+    (``owner = leaf_index % process_count``); every process writes only its
+    own leaves plus a shard manifest, and process 0 merges the shards and
+    publishes the final manifest — save I/O no longer funnels through one
+    host.  With one process this degenerates to the single-host format
+    (same files, same manifest), so the two layouts restore identically.
 
 Production note (DESIGN.md §7): at 405B params a host-gathered npy snapshot
 is not viable; the format boundary is this module's API, and the production
 implementation swaps in per-shard tensorstore writes (Orbax-style) behind
 the same three functions.  Every consumer in this repo (train loop, examples,
-fault-tolerance tests) goes through this API only.
+fault-tolerance tests, the durable Krylov driver, the serving journal's
+blob store) goes through this API only.
 """
 
 from __future__ import annotations
@@ -27,12 +40,39 @@ import json
 import os
 import shutil
 import threading
+import time
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 _SENTINEL = "manifest.json"
+_SHARD_MANIFEST = "manifest_shard_{p}.json"
+
+#: Orphaned ``step_*.tmp`` directories older than this many seconds are
+#: swept by the next save (a live non-blocking writer's tmp dir is younger).
+TMP_SWEEP_TTL_S = 600.0
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be restored into the requested tree."""
+
+
+class CheckpointCorruptionError(CheckpointError):
+    """A checkpoint step is damaged on disk (checksum/shape/missing file)."""
+
+
+def leaf_crc32(arr: np.ndarray) -> int:
+    """CRC32 of a leaf's raw bytes (shape/dtype are covered by the manifest)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _leaf_dtype(x) -> np.dtype:
+    """Leaf dtype without a device transfer (arrays, ShapeDtypeStructs,
+    python scalars alike)."""
+    dt = getattr(x, "dtype", None)
+    return np.dtype(dt) if dt is not None else np.asarray(x).dtype
 
 
 def _tree_paths(tree) -> list[str]:
@@ -41,56 +81,190 @@ def _tree_paths(tree) -> list[str]:
     return [jax.tree_util.keystr(p) for p in paths]
 
 
+def _sweep_orphaned_tmp(directory: str, ttl_s: float, *,
+                        skip: Optional[str] = None) -> int:
+    """Remove ``step_*.tmp`` dirs older than ``ttl_s`` (killed writers).
+
+    ``skip`` protects the calling writer's own tmp dir; any *other* tmp dir
+    younger than the TTL is assumed to belong to a live concurrent writer
+    and left alone — the sweep only collects genuinely orphaned wreckage.
+    """
+    if not os.path.isdir(directory):
+        return 0
+    now = time.time()
+    swept = 0
+    for name in os.listdir(directory):
+        if not (name.startswith("step_") and name.endswith(".tmp")):
+            continue
+        full = os.path.join(directory, name)
+        if full == skip:
+            continue
+        try:
+            age = now - os.path.getmtime(full)
+        except OSError:  # concurrent writer renamed/removed it: not ours
+            continue
+        if age >= ttl_s:
+            shutil.rmtree(full, ignore_errors=True)
+            swept += 1
+    return swept
+
+
+class CheckpointWriter(threading.Thread):
+    """Async checkpoint writer: captures a write failure instead of dying
+    silently.  ``check()`` (after ``join()``) re-raises it; blocking saves
+    call it for the caller, so a failed blocking save raises."""
+
+    def __init__(self, target):
+        super().__init__(daemon=True)
+        self._write = target
+        self.exception: Optional[BaseException] = None
+
+    def run(self):
+        try:
+            self._write()
+        except BaseException as e:  # surfaced via check()
+            self.exception = e
+
+    def check(self) -> None:
+        if self.exception is not None:
+            raise self.exception
+
+
 def save_checkpoint(directory: str, step: int, tree: Any, *,
-                    blocking: bool = True, keep: int = 3) -> threading.Thread:
-    """Snapshot ``tree`` at ``step``.  Returns the writer thread."""
+                    blocking: bool = True, keep: int = 3,
+                    process_index: Optional[int] = None,
+                    process_count: Optional[int] = None,
+                    tmp_ttl_s: float = TMP_SWEEP_TTL_S,
+                    barrier_timeout_s: float = 300.0) -> CheckpointWriter:
+    """Snapshot ``tree`` at ``step``.  Returns the writer thread.
+
+    Multi-host: every process calls this with the same ``step``/``tree``
+    structure; leaves are partitioned ``i % process_count == process_index``
+    and each process host-gathers + writes only its own.  Process 0 waits
+    for every shard manifest, merges them, writes the final manifest, and
+    atomically publishes the step.  The defaults read
+    ``jax.process_index()``/``jax.process_count()``, so single-process
+    callers never see the machinery.
+    """
+    p = jax.process_index() if process_index is None else process_index
+    np_procs = jax.process_count() if process_count is None else process_count
     flat, treedef = jax.tree_util.tree_flatten(tree)
-    host = [np.asarray(jax.device_get(x)) for x in flat]
+    owned = [i for i in range(len(flat)) if i % np_procs == p]
+    host = {i: np.asarray(jax.device_get(flat[i])) for i in owned}
     paths = _tree_paths(tree)
+    shapes = [list(np.shape(x)) for x in flat]
+    dtypes = [str(_leaf_dtype(x)) for x in flat]
 
     def write():
         final = os.path.join(directory, f"step_{step:08d}")
         tmp = final + ".tmp"
         os.makedirs(tmp, exist_ok=True)
-        for i, arr in enumerate(host):
+        _sweep_orphaned_tmp(directory, tmp_ttl_s, skip=tmp)
+        crcs = {}
+        for i, arr in host.items():
             np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+            crcs[i] = leaf_crc32(arr)
+        shard = {
+            "process_index": p,
+            "leaves": sorted(host),
+            "crc32": {str(i): crcs[i] for i in host},
+        }
+        shard_path = os.path.join(tmp, _SHARD_MANIFEST.format(p=p))
+        with open(shard_path + ".part", "w") as f:
+            json.dump(shard, f)
+        os.rename(shard_path + ".part", shard_path)  # shard commit point
+        if p != 0:
+            return  # process 0 merges and publishes
+        # merge: wait for every process's shard manifest (each is tiny)
+        deadline = time.time() + barrier_timeout_s
+        crc_all: dict[int, int] = dict(crcs)
+        for q in range(1, np_procs):
+            qpath = os.path.join(tmp, _SHARD_MANIFEST.format(p=q))
+            while not os.path.exists(qpath):
+                if time.time() > deadline:
+                    raise CheckpointError(
+                        f"multi-host save barrier timed out waiting for "
+                        f"process {q}'s shard manifest at step {step}")
+                time.sleep(0.01)
+            with open(qpath) as f:
+                qshard = json.load(f)
+            crc_all.update({int(k): v for k, v in qshard["crc32"].items()})
         manifest = {
             "step": step,
-            "num_leaves": len(host),
+            "num_leaves": len(flat),
             "paths": paths,
-            "shapes": [list(a.shape) for a in host],
-            "dtypes": [str(a.dtype) for a in host],
+            "shapes": shapes,
+            "dtypes": dtypes,
+            "crc32": [crc_all[i] for i in range(len(flat))],
+            "process_count": np_procs,
         }
         with open(os.path.join(tmp, _SENTINEL), "w") as f:
             json.dump(manifest, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+        try:
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except OSError:
+            # a concurrent writer published this step first: keep theirs
+            shutil.rmtree(tmp, ignore_errors=True)
         _garbage_collect(directory, keep)
 
-    t = threading.Thread(target=write, daemon=True)
+    t = CheckpointWriter(write)
     t.start()
     if blocking:
         t.join()
+        t.check()  # a failed blocking save must raise, not return
     return t
 
 
 def _garbage_collect(directory: str, keep: int) -> None:
+    """Drop all but the newest ``keep`` steps (``keep <= 0`` disables GC).
+
+    Tolerates concurrent non-blocking writers: ``.tmp`` dirs are never
+    touched (``all_steps`` excludes them) and a step that vanishes between
+    listing and removal — another GC racing us — is ignored.
+    """
     steps = sorted(all_steps(directory))
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
                       ignore_errors=True)
 
 
+def _manifest_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}", _SENTINEL)
+
+
+def _load_manifest(directory: str, step: int) -> dict:
+    path = _manifest_path(directory, step)
+    if not os.path.exists(path):
+        raise CheckpointCorruptionError(
+            f"step {step} in {directory!r} has no manifest "
+            f"(partially written or deleted)")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointCorruptionError(
+            f"step {step} manifest in {directory!r} is unreadable: {e}")
+
+
 def all_steps(directory: str) -> list[int]:
+    """Steps with a *parseable* manifest — a torn manifest never lists."""
     if not os.path.isdir(directory):
         return []
     out = []
     for name in os.listdir(directory):
-        full = os.path.join(directory, name)
-        if (name.startswith("step_") and not name.endswith(".tmp")
-                and os.path.exists(os.path.join(full, _SENTINEL))):
-            out.append(int(name[len("step_"):]))
+        if not (name.startswith("step_") and not name.endswith(".tmp")):
+            continue
+        try:
+            step = int(name[len("step_"):])
+        except ValueError:
+            continue
+        try:
+            _load_manifest(directory, step)
+        except CheckpointCorruptionError:
+            continue
+        out.append(step)
     return sorted(out)
 
 
@@ -99,25 +273,71 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _restore_arrays(directory: str, step: int, like: Any) -> tuple:
+    """Load + validate every leaf; raises CheckpointError subclasses."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    manifest = _load_manifest(directory, step)
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    like_paths = _tree_paths(like)
+    if manifest["num_leaves"] != len(flat_like):
+        raise CheckpointError(
+            f"checkpoint step {step} holds {manifest['num_leaves']} leaves "
+            f"but the target tree has {len(flat_like)}")
+    # a drifted state *definition* (renamed/reordered fields) must not
+    # restore silently into the wrong leaves — compare leaf paths when the
+    # manifest recorded them
+    for i, (mp, lp) in enumerate(zip(manifest.get("paths", like_paths),
+                                     like_paths)):
+        if mp != lp:
+            raise CheckpointError(
+                f"checkpoint step {step} leaf {i} was saved at tree path "
+                f"{mp!r} but the target tree expects {lp!r} — the state "
+                f"definition drifted since this checkpoint was written")
+    crcs = manifest.get("crc32")
+    arrs = []
+    for i, ref in enumerate(flat_like):
+        leaf_path = os.path.join(path, f"leaf_{i}.npy")
+        name = like_paths[i] or f"leaf_{i}"
+        try:
+            arr = np.load(leaf_path)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptionError(
+                f"checkpoint step {step} leaf {name!r} ({leaf_path}) is "
+                f"missing or unreadable: {e}")
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise CheckpointError(
+                f"checkpoint step {step} leaf {name!r} has shape "
+                f"{tuple(arr.shape)} but the target tree expects "
+                f"{tuple(ref.shape)}")
+        ref_dtype = _leaf_dtype(ref)
+        if arr.dtype != ref_dtype:
+            raise CheckpointError(
+                f"checkpoint step {step} leaf {name!r} has dtype "
+                f"{arr.dtype} but the target tree expects {ref_dtype}")
+        if crcs is not None:
+            crc = leaf_crc32(arr)
+            if crc != crcs[i]:
+                raise CheckpointCorruptionError(
+                    f"checkpoint step {step} leaf {name!r} failed its CRC32 "
+                    f"check (stored {crcs[i]:#010x}, got {crc:#010x}) — "
+                    f"the file was truncated or bit-flipped on disk")
+        arrs.append(arr)
+    return treedef, arrs
+
+
 def restore_checkpoint(directory: str, step: int, like: Any, *,
                        shardings: Any = None) -> Any:
     """Restore into the structure of ``like`` (a pytree or eval_shape tree).
 
     ``shardings``: optional pytree of Shardings (same structure) — enables
     elastic restore onto a different mesh than the one that saved.
+
+    Every leaf is validated against ``like`` (count, tree path, shape,
+    dtype) and against its manifest CRC32; violations raise
+    :class:`CheckpointError` / :class:`CheckpointCorruptionError` naming
+    the offending leaf instead of restoring silently into the wrong state.
     """
-    path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, _SENTINEL)) as f:
-        manifest = json.load(f)
-    flat_like, treedef = jax.tree_util.tree_flatten(like)
-    assert manifest["num_leaves"] == len(flat_like), \
-        (manifest["num_leaves"], len(flat_like))
-    arrs = []
-    for i, ref in enumerate(flat_like):
-        arr = np.load(os.path.join(path, f"leaf_{i}.npy"))
-        assert tuple(arr.shape) == tuple(ref.shape), \
-            (i, arr.shape, ref.shape)
-        arrs.append(arr)
+    treedef, arrs = _restore_arrays(directory, step, like)
     tree = jax.tree_util.tree_unflatten(treedef, arrs)
     if shardings is not None:
         tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
@@ -125,3 +345,22 @@ def restore_checkpoint(directory: str, step: int, like: Any, *,
     else:
         tree = jax.tree.map(jax.numpy.asarray, tree)
     return tree
+
+
+def restore_latest_valid(directory: str, like: Any, *,
+                         shardings: Any = None) -> tuple[Optional[int], Any]:
+    """Restore the newest step that passes full validation.
+
+    Walks steps newest-first; a step that fails its checksum / shape /
+    manifest validation is skipped (corruption detection) and the previous
+    one is tried — a bit-flipped latest snapshot costs one step of
+    progress, never a crash loop or silent garbage.  Returns
+    ``(step, tree)``; ``(None, None)`` when no intact step exists.
+    """
+    for step in sorted(all_steps(directory), reverse=True):
+        try:
+            return step, restore_checkpoint(directory, step, like,
+                                            shardings=shardings)
+        except CheckpointError:
+            continue
+    return None, None

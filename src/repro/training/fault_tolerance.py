@@ -89,11 +89,12 @@ def run_resilient(
     """
     abstract = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    initial_state = state  # pre-first-checkpoint restart target
 
-    start = ckpt.latest_step(ckpt_dir)
+    start, restored = ckpt.restore_latest_valid(ckpt_dir, abstract,
+                                                shardings=state_shardings)
     if start is not None:
-        state = ckpt.restore_checkpoint(ckpt_dir, start, abstract,
-                                        shardings=state_shardings)
+        state = restored
         log.info("resumed from checkpoint step %d", start)
     step = int(start) if start is not None else 0
 
@@ -126,14 +127,18 @@ def run_resilient(
                         step, e)
             if pending is not None:
                 pending.join()  # let any in-flight write land
-            last = ckpt.latest_step(ckpt_dir)
+            last, restored = ckpt.restore_latest_valid(
+                ckpt_dir, abstract, shardings=state_shardings)
             if last is None:
-                step = 0  # no checkpoint yet: restart from scratch state
-                raise RuntimeError(
-                    "fault before first checkpoint; caller must re-init")
-            state = ckpt.restore_checkpoint(ckpt_dir, last, abstract,
-                                            shardings=state_shardings)
-            step = int(last)
+                # fault before the first checkpoint landed: restart from the
+                # caller's initial state like any other restart (replay from
+                # step 0 is deterministic — batch_fn is a function of the
+                # step index), still bounded by max_restarts above
+                state = initial_state
+                step = 0
+            else:
+                state = restored
+                step = int(last)
     if pending is not None:
         pending.join()
     return state, {

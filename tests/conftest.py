@@ -8,9 +8,31 @@ with ``pytest -m "not multidevice"``.
 """
 
 import jax
+import pytest
 
 # The paper's accuracy claims (1e-14 eigenvalue errors) require float64.
 jax.config.update("jax_enable_x64", True)
+
+# Every XLA:CPU executable JAX caches holds ~3 anonymous mmaps (code page +
+# rodata + guard), and the cache lives for the whole pytest process.  The
+# full suite compiles tens of thousands of programs, which walks the process
+# straight into the kernel's vm.max_map_count ceiling (65530 by default) —
+# past it, mmap fails inside XLA's compiler and the interpreter segfaults.
+# Dropping the caches when the map count gets close trades a handful of
+# recompiles for a bounded map footprint.
+_MAP_COUNT_SOFT_LIMIT = 40_000
+
+
+@pytest.fixture(autouse=True)
+def _bound_xla_map_count():
+    yield
+    try:
+        with open("/proc/self/maps") as f:
+            n_maps = sum(1 for _ in f)
+    except OSError:  # non-Linux: no procfs, and no 65530 default either
+        return
+    if n_maps > _MAP_COUNT_SOFT_LIMIT:
+        jax.clear_caches()
 
 try:
     import hypothesis  # noqa: F401  — real package, if installed

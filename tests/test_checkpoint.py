@@ -1,7 +1,10 @@
-"""Checkpoint + fault-tolerance tests: round trip, atomicity, GC, resume
-equivalence with injected faults."""
+"""Checkpoint + fault-tolerance tests: round trip, atomicity, GC, CRC
+corruption torture, multi-host sharded writes, resume equivalence with
+injected faults."""
 
+import json
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +67,202 @@ def test_step_timer_flags_stragglers():
     assert sum(flagged) == 1
 
 
+# ---------------------------------------------------------------------------
+# Validation errors (satellite: informative CheckpointError naming the leaf)
+# ---------------------------------------------------------------------------
+
+def test_restore_rejects_wrong_dtype(tmp_path):
+    state = _tiny_state()
+    ckpt.save_checkpoint(str(tmp_path), 1, state)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+    like["b"]["c"] = jax.ShapeDtypeStruct((3,), jnp.float64)  # drifted dtype
+    with pytest.raises(ckpt.CheckpointError, match=r"\['b'\]\['c'\].*dtype"):
+        ckpt.restore_checkpoint(str(tmp_path), 1, like)
+
+
+def test_restore_rejects_wrong_shape(tmp_path):
+    state = _tiny_state()
+    ckpt.save_checkpoint(str(tmp_path), 1, state)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+    like["a"] = jax.ShapeDtypeStruct((3, 2), jnp.float32)
+    with pytest.raises(ckpt.CheckpointError, match=r"\['a'\].*shape"):
+        ckpt.restore_checkpoint(str(tmp_path), 1, like)
+
+
+def test_restore_rejects_drifted_tree_paths(tmp_path):
+    """Renamed state fields must not restore silently into wrong leaves."""
+    state = _tiny_state()
+    ckpt.save_checkpoint(str(tmp_path), 1, state)
+    drifted = {"a": state["a"], "b": {"renamed": state["b"]["c"]},
+               "step": state["step"]}
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        drifted)
+    with pytest.raises(ckpt.CheckpointError, match="tree path"):
+        ckpt.restore_checkpoint(str(tmp_path), 1, like)
+
+
+def test_restore_rejects_leaf_count_mismatch(tmp_path):
+    state = _tiny_state()
+    ckpt.save_checkpoint(str(tmp_path), 1, state)
+    with pytest.raises(ckpt.CheckpointError, match="leaves"):
+        ckpt.restore_checkpoint(str(tmp_path), 1, {"a": state["a"]})
+
+
+# ---------------------------------------------------------------------------
+# Corruption torture (satellite: CRC detection + previous-step fallback)
+# ---------------------------------------------------------------------------
+
+def _like(state):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+
+
+def _step_dir(tmp_path, step):
+    return tmp_path / f"step_{step:08d}"
+
+
+@pytest.mark.parametrize("damage", ["truncate", "bitflip", "delete_leaf",
+                                    "delete_manifest"])
+def test_corruption_recovers_previous_step(tmp_path, damage):
+    """Damage the newest step in four ways; restore_latest_valid must skip
+    it and recover the intact previous step, never return partial data."""
+    state = _tiny_state()
+    ckpt.save_checkpoint(str(tmp_path), 1, state)
+    state2 = jax.tree.map(lambda x: x + 1, state)
+    ckpt.save_checkpoint(str(tmp_path), 2, state2)
+
+    leaf = _step_dir(tmp_path, 2) / "leaf_0.npy"
+    if damage == "truncate":
+        raw = leaf.read_bytes()
+        leaf.write_bytes(raw[:len(raw) // 2])
+    elif damage == "bitflip":
+        raw = bytearray(leaf.read_bytes())
+        raw[-1] ^= 0x40  # flip a bit inside the float payload
+        leaf.write_bytes(bytes(raw))
+    elif damage == "delete_leaf":
+        os.remove(leaf)
+    else:
+        os.remove(_step_dir(tmp_path, 2) / "manifest.json")
+
+    if damage == "delete_manifest":
+        # a manifest-less step is not even listed (torn-write semantics)
+        assert ckpt.latest_step(str(tmp_path)) == 1
+    else:
+        with pytest.raises(ckpt.CheckpointError):
+            ckpt.restore_checkpoint(str(tmp_path), 2, _like(state))
+
+    step, restored = ckpt.restore_latest_valid(str(tmp_path), _like(state))
+    assert step == 1
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bitflip_raises_corruption_error_naming_leaf(tmp_path):
+    state = _tiny_state()
+    ckpt.save_checkpoint(str(tmp_path), 5, state)
+    leaf = _step_dir(tmp_path, 5) / "leaf_1.npy"  # ['b']['c']
+    raw = bytearray(leaf.read_bytes())
+    raw[-1] ^= 0x01
+    leaf.write_bytes(bytes(raw))
+    with pytest.raises(ckpt.CheckpointCorruptionError,
+                       match=r"\['b'\]\['c'\].*CRC32"):
+        ckpt.restore_checkpoint(str(tmp_path), 5, _like(state))
+
+
+def test_all_steps_corrupt_returns_none(tmp_path):
+    state = _tiny_state()
+    ckpt.save_checkpoint(str(tmp_path), 1, state)
+    os.remove(_step_dir(tmp_path, 1) / "leaf_0.npy")
+    step, restored = ckpt.restore_latest_valid(str(tmp_path), _like(state))
+    assert step is None and restored is None
+
+
+# ---------------------------------------------------------------------------
+# Orphaned tmp sweep + mid-flight writer death (satellite)
+# ---------------------------------------------------------------------------
+
+def test_killed_writer_orphan_swept_by_next_save(tmp_path, monkeypatch):
+    """Kill a save mid-write (np.save raises partway); the torn .tmp dir
+    must never publish, and the next save (after the TTL) sweeps it."""
+    state = _tiny_state()
+    calls = {"n": 0}
+    real_save = np.save
+
+    def dying_save(path, arr, *a, **k):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise OSError("simulated writer death mid-flight")
+        return real_save(path, arr, *a, **k)
+
+    monkeypatch.setattr(np, "save", dying_save)
+    with pytest.raises(OSError, match="mid-flight"):
+        ckpt.save_checkpoint(str(tmp_path), 1, state)
+    monkeypatch.setattr(np, "save", real_save)
+
+    # the torn write left a .tmp dir and no published step
+    orphans = [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+    assert orphans == ["step_00000001.tmp"]
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+    # age the orphan past the TTL; the next save sweeps it and publishes
+    old = time.time() - 2 * ckpt.TMP_SWEEP_TTL_S
+    os.utime(tmp_path / orphans[0], (old, old))
+    ckpt.save_checkpoint(str(tmp_path), 2, state)
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_young_tmp_of_live_writer_not_swept(tmp_path):
+    """A fresh .tmp dir belongs to a live concurrent non-blocking writer:
+    the sweep must leave it alone."""
+    state = _tiny_state()
+    live = tmp_path / "step_00000009.tmp"
+    os.makedirs(live)
+    ckpt.save_checkpoint(str(tmp_path), 1, state)
+    assert live.is_dir()  # younger than the TTL: protected
+    # and GC never touches .tmp dirs either
+    for s in (2, 3, 4):
+        ckpt.save_checkpoint(str(tmp_path), s, state, keep=2)
+    assert live.is_dir()
+
+
+# ---------------------------------------------------------------------------
+# Multi-host leaf-sharded save (tentpole: per-process I/O)
+# ---------------------------------------------------------------------------
+
+def test_multihost_sharded_save_restores_identically(tmp_path):
+    """Emulate a 2-process save: each process writes only its owned leaves
+    (round-robin) plus a shard manifest; process 0 merges and publishes.
+    The published step must restore exactly like a single-host save."""
+    state = _tiny_state()  # 3 leaves -> proc0 owns {0, 2}, proc1 owns {1}
+    t1 = ckpt.save_checkpoint(str(tmp_path), 3, state, blocking=False,
+                              process_index=1, process_count=2)
+    t0 = ckpt.save_checkpoint(str(tmp_path), 3, state, blocking=False,
+                              process_index=0, process_count=2)
+    t0.join(); t1.join()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    manifest = json.load(open(_step_dir(tmp_path, 3) / "manifest.json"))
+    assert manifest["process_count"] == 2
+    assert len(manifest["crc32"]) == 3  # every leaf checksummed post-merge
+    restored = ckpt.restore_checkpoint(str(tmp_path), 3, _like(state))
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_multihost_barrier_times_out_without_peer(tmp_path):
+    """Process 0 alone must not publish a half-written step: it waits for
+    the missing shard and raises at the deadline."""
+    state = _tiny_state()
+    with pytest.raises(ckpt.CheckpointError, match="barrier timed out"):
+        ckpt.save_checkpoint(str(tmp_path), 1, state, process_index=0,
+                             process_count=2, barrier_timeout_s=0.2)
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+
 def _setup_training(tmp_path, tag):
     cfg = reduced_config(get_config("granite-3-2b"))
     tc = TrainConfig(num_microbatches=1)
@@ -105,6 +304,41 @@ def test_resilient_resume_bit_identical(tmp_path):
                     jax.tree_util.tree_leaves(state1.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=0, atol=0)
+
+
+def test_fault_before_first_checkpoint_restarts_from_initial(tmp_path):
+    """Regression: a fault BEFORE the first checkpoint lands used to hit a
+    dead-code path.  It must restart from the caller's initial state (replay
+    from step 0 is deterministic) and still respect max_restarts."""
+    state0 = {"x": jnp.zeros((4,), jnp.float32)}
+
+    def train_step(state, batch):
+        return {"x": state["x"] + batch}, {"loss": jnp.sum(batch)}
+
+    batch_fn = lambda s: jnp.full((4,), float(s), jnp.float32)
+    fired = {"n": 0}
+
+    def fault_hook(s):
+        if s == 1 and fired["n"] < 2:  # ckpt_every=5: no checkpoint yet
+            fired["n"] += 1
+            raise InjectedFault("fault before first checkpoint")
+
+    state1, info = run_resilient(
+        train_step, state0, batch_fn, total_steps=4,
+        ckpt_dir=str(tmp_path), ckpt_every=5, fault_hook=fault_hook,
+        log_every=100)
+    assert info["restarts"] == 2
+    np.testing.assert_allclose(np.asarray(state1["x"]),
+                               np.full((4,), float(sum(range(4)))))
+    # max_restarts still bounds the pre-first-checkpoint restart loop
+    def always_fault(s):
+        raise InjectedFault("always")
+
+    with pytest.raises(InjectedFault):
+        run_resilient(
+            train_step, state0, batch_fn, total_steps=4,
+            ckpt_dir=str(tmp_path / "cap"), ckpt_every=5, max_restarts=2,
+            fault_hook=always_fault, log_every=100)
 
 
 def test_straggler_detection_across_restore_and_replay(tmp_path):

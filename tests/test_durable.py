@@ -1,0 +1,181 @@
+"""Durable Krylov execution: kill-and-resume determinism (chaos suite).
+
+The acceptance contract: a ``resumable_solve`` / ``resumable_eigsh`` killed
+at a random iteration by a faultinject kill-point and resumed from its
+latest snapshot produces results *bit-identical* to an uninterrupted run
+(the loop bodies are deterministic functions of the checkpointed state
+pytree, and segmenting the loop does not change the body sequence).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lanczos import eigsh
+from repro.core.solvers import cg, cg_bank, minres
+from repro.runtime import (
+    DurablePolicy, KillPoint, KillSchedule, Preemption, resumable_eigsh,
+    resumable_solve,
+)
+
+pytestmark = pytest.mark.chaos
+
+
+@pytest.fixture(scope="module")
+def spd():
+    rng = np.random.default_rng(0)
+    n, c = 48, 2
+    a = rng.standard_normal((n, n))
+    a = jnp.asarray(a @ a.T + n * np.eye(n))
+    b = jnp.asarray(rng.standard_normal((n, c)))
+    return a, b
+
+
+def _mv(a):
+    return lambda x: a @ x
+
+
+POLICY = DurablePolicy(snapshot_every=5)
+
+
+@pytest.mark.parametrize("kill_at", [3, 7, 12])
+def test_cg_kill_and_resume_bit_identical(tmp_path, spd, kill_at):
+    a, b = spd
+    ref = cg(_mv(a), b, tol=1e-10, maxiter=100)
+    sol, rep = resumable_solve(
+        _mv(a), b, ckpt_dir=str(tmp_path), tol=1e-10, maxiter=100,
+        policy=POLICY, fault_hook=KillPoint(at_iteration=kill_at))
+    assert rep.restarts == 1
+    np.testing.assert_array_equal(np.asarray(sol.x), np.asarray(ref.x))
+    assert int(np.max(np.asarray(sol.num_iters))) == int(np.max(np.asarray(ref.num_iters)))
+
+
+def test_minres_kill_and_resume_bit_identical(tmp_path, spd):
+    a, b = spd
+    ref = minres(_mv(a), b, tol=1e-10, maxiter=100)
+    sol, rep = resumable_solve(
+        _mv(a), b, ckpt_dir=str(tmp_path), method="minres", tol=1e-10,
+        maxiter=100, policy=POLICY, fault_hook=KillPoint(at_iteration=8))
+    assert rep.restarts == 1
+    np.testing.assert_array_equal(np.asarray(sol.x), np.asarray(ref.x))
+
+
+def test_cg_cross_process_resume(tmp_path, spd):
+    """max_restarts=0 turns the injected kill into a real process death;
+    invoking the same solve again must resume from the snapshot (not
+    iteration 0) and still match the uninterrupted run exactly."""
+    a, b = spd
+    ref = cg(_mv(a), b, tol=1e-10, maxiter=100)
+    with pytest.raises(Preemption):
+        resumable_solve(
+            _mv(a), b, ckpt_dir=str(tmp_path), tol=1e-10, maxiter=100,
+            policy=DurablePolicy(snapshot_every=5, max_restarts=0),
+            fault_hook=KillPoint(at_iteration=12))
+    sol, rep = resumable_solve(
+        _mv(a), b, ckpt_dir=str(tmp_path), tol=1e-10, maxiter=100,
+        policy=POLICY)
+    assert rep.resumed_from is not None and rep.resumed_from >= 5
+    np.testing.assert_array_equal(np.asarray(sol.x), np.asarray(ref.x))
+
+
+def test_preemption_storm_backoff_and_cap(tmp_path, spd):
+    """A storm of kills is absorbed up to max_restarts (with backoff), and
+    one kill beyond the cap propagates."""
+    a, b = spd
+    ref = cg(_mv(a), b, tol=1e-10, maxiter=100)
+    storm = KillSchedule(at_iterations=(3, 8, 12))
+    sol, rep = resumable_solve(
+        _mv(a), b, ckpt_dir=str(tmp_path / "ok"), tol=1e-10, maxiter=100,
+        policy=DurablePolicy(snapshot_every=5, max_restarts=3,
+                             backoff_base_s=1e-3),
+        fault_hook=storm)
+    assert rep.restarts == 3
+    np.testing.assert_array_equal(np.asarray(sol.x), np.asarray(ref.x))
+    with pytest.raises(Preemption):
+        resumable_solve(
+            _mv(a), b, ckpt_dir=str(tmp_path / "cap"), tol=1e-10,
+            maxiter=100,
+            policy=DurablePolicy(snapshot_every=5, max_restarts=2),
+            fault_hook=KillSchedule(at_iterations=(3, 8, 12)))
+
+
+def test_bank_kill_and_resume(tmp_path, spd):
+    a, b = spd
+    n = a.shape[0]
+    shifts = jnp.asarray([0.5, 2.0])
+    bank_mv = lambda xb: (jnp.einsum("ij,sjc->sic", a, xb)
+                          + shifts[:, None, None] * xb)
+    bb = jnp.stack([b, 2.0 * b])  # (S, n, C)
+    ref = cg_bank(bank_mv, bb, tol=1e-10, maxiter=100)
+    sol, rep = resumable_solve(
+        bank_mv, bb, ckpt_dir=str(tmp_path), bank=True, tol=1e-10,
+        maxiter=100, policy=POLICY, fault_hook=KillPoint(at_iteration=9))
+    assert rep.restarts == 1
+    np.testing.assert_array_equal(np.asarray(sol.x), np.asarray(ref.x))
+
+
+@pytest.mark.parametrize("block_size,kill_at", [(1, 11), (2, 6)])
+def test_eigsh_kill_and_resume_bit_identical(tmp_path, spd, block_size,
+                                             kill_at):
+    a, _ = spd
+    n = a.shape[0]
+    key = jax.random.PRNGKey(3)
+    ref = eigsh(_mv(a), n, 4, key=key, num_iters=30, block_size=block_size)
+    res, rep = resumable_eigsh(
+        _mv(a), n, 4, ckpt_dir=str(tmp_path), key=key, num_iters=30,
+        block_size=block_size, policy=POLICY,
+        fault_hook=KillPoint(at_iteration=kill_at))
+    assert rep.restarts == 1
+    np.testing.assert_array_equal(np.asarray(res.eigenvalues),
+                                  np.asarray(ref.eigenvalues))
+    np.testing.assert_array_equal(np.asarray(res.eigenvectors),
+                                  np.asarray(ref.eigenvectors))
+
+
+def test_eigsh_cross_process_resume(tmp_path, spd):
+    a, _ = spd
+    n = a.shape[0]
+    key = jax.random.PRNGKey(5)
+    ref = eigsh(_mv(a), n, 3, key=key, num_iters=30)
+    with pytest.raises(Preemption):
+        resumable_eigsh(
+            _mv(a), n, 3, ckpt_dir=str(tmp_path), key=key, num_iters=30,
+            policy=DurablePolicy(snapshot_every=6, max_restarts=0),
+            fault_hook=KillPoint(at_iteration=14))
+    res, rep = resumable_eigsh(
+        _mv(a), n, 3, ckpt_dir=str(tmp_path), key=key, num_iters=30,
+        policy=DurablePolicy(snapshot_every=6))
+    assert rep.resumed_from is not None and rep.resumed_from >= 6
+    np.testing.assert_array_equal(np.asarray(res.eigenvalues),
+                                  np.asarray(ref.eigenvalues))
+
+
+def test_stale_foreign_snapshot_is_rejected(tmp_path, spd):
+    """A ckpt_dir holding snapshots from a *different* problem must not be
+    restored into this solve: the checkpoint validators reject the mismatch
+    and the solve starts fresh — and still gets the right answer."""
+    a, b = spd
+    other = jnp.asarray(np.eye(12) * 3.0)
+    resumable_solve(_mv(other), jnp.ones((12, 1)), ckpt_dir=str(tmp_path),
+                    tol=1e-10, maxiter=50, policy=POLICY)
+    ref = cg(_mv(a), b, tol=1e-10, maxiter=100)
+    sol, rep = resumable_solve(
+        _mv(a), b, ckpt_dir=str(tmp_path), tol=1e-10, maxiter=100,
+        policy=POLICY)
+    assert rep.resumed_from is None  # foreign snapshots were not usable
+    np.testing.assert_array_equal(np.asarray(sol.x), np.asarray(ref.x))
+
+
+def test_uninterrupted_durable_solve_matches_plain(tmp_path, spd):
+    """With no faults at all, the segmented durable path is the plain
+    solver: identical solution, identical iteration count."""
+    a, b = spd
+    ref = cg(_mv(a), b, tol=1e-10, maxiter=100)
+    sol, rep = resumable_solve(
+        _mv(a), b, ckpt_dir=str(tmp_path), tol=1e-10, maxiter=100,
+        policy=POLICY)
+    assert rep.restarts == 0 and rep.snapshots >= 1
+    np.testing.assert_array_equal(np.asarray(sol.x), np.asarray(ref.x))
+    assert int(np.max(np.asarray(sol.num_iters))) == int(np.max(np.asarray(ref.num_iters)))

@@ -1,0 +1,159 @@
+"""Journaled serving registry: warm-restart recovery, checksummed records,
+corruption surfacing.
+
+Acceptance contract: a GraphServeEngine warm-restarted from the journal
+serves predictions identical (<= 1e-12) to the pre-crash engine with zero
+replans after warmup; a checksum-corrupted journal record is detected,
+skipped, and surfaced in the recovery report.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FastsumParams, make_kernel
+from repro.graph import krr_fit
+from repro.serving import (
+    GraphModelRegistry, GraphServeEngine, PredictRequest, RegistryJournal,
+    recover_registry,
+)
+from repro.serving import journal as journal_mod
+
+PARAMS = FastsumParams(n_bandwidth=32, m=4)
+
+
+@pytest.fixture(scope="module")
+def models():
+    rng = np.random.default_rng(11)
+    xtr = jnp.asarray(rng.uniform(-3, 3, (150, 2)))
+    ytr = jnp.asarray(np.sign(rng.standard_normal(150)))
+    m_a = krr_fit(make_kernel("gaussian", sigma=1.0), xtr, ytr, 1e-2, PARAMS)
+    m_b = krr_fit(make_kernel("gaussian", sigma=1.5), xtr, ytr, 1e-2, PARAMS)
+    return {"a": m_a, "b": m_b}
+
+
+def _journaled_registry(tmp_path, models):
+    jpath = str(tmp_path / "registry.journal")
+    reg = GraphModelRegistry(journal=RegistryJournal(jpath))
+    for mid, model in models.items():
+        reg.register(mid, model)
+    return reg, jpath
+
+
+def _serve_all(registry, queries):
+    engine = GraphServeEngine(registry, slots=4, chunk=32)
+    reqs = [PredictRequest(uid=i, model_id=mid, query_points=q)
+            for i, (mid, q) in enumerate(queries)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained()
+    assert all(r.done and r.error is None for r in reqs), \
+        [(r.uid, r.error) for r in reqs]
+    return [r.output for r in reqs], engine
+
+
+def test_record_roundtrip(models):
+    rec = journal_mod.register_record("a", models["a"], margin=0.75)
+    rec["crc"] = journal_mod.record_crc(rec)
+    rt = json.loads(json.dumps(rec))
+    assert journal_mod.record_crc(rt) == rt["crc"]
+    model, domain, margin = journal_mod.decode_register(rt)
+    np.testing.assert_array_equal(np.asarray(model.alpha),
+                                  np.asarray(models["a"].alpha))
+    np.testing.assert_array_equal(np.asarray(model.train_points),
+                                  np.asarray(models["a"].train_points))
+    assert model.kernel.name == "gaussian"
+    assert float(model.kernel.params["sigma"]) == 1.0
+    assert model.params == models["a"].params
+    assert domain is None and margin == 0.75
+
+
+def test_warm_restart_identical_predictions(tmp_path, models):
+    """The acceptance test: kill the process (drop the registry), recover
+    from the journal, and the warm-restarted engine serves identical
+    predictions with zero replans after warmup."""
+    reg, jpath = _journaled_registry(tmp_path, models)
+    rng = np.random.default_rng(0)
+    queries = [(mid, rng.uniform(-2.5, 2.5, (40, 2)))
+               for mid in ("a", "b", "a")]
+    out_before, _ = _serve_all(reg, queries)
+
+    reg2, report = recover_registry(jpath)
+    assert report.clean, report.summary()
+    assert report.tenants == {"a": "recovered", "b": "recovered"}
+    out_after, engine = _serve_all(reg2, queries)
+    for before, after in zip(out_before, out_after):
+        np.testing.assert_allclose(after, before, rtol=0, atol=1e-12)
+    assert engine.counters["replans"] == 0
+    # shared train points -> recovery rebuilt ONE plan for the group
+    assert reg2.stats()["plan_builds"] == 1
+
+
+def test_recovery_replay_appends_nothing(tmp_path, models):
+    _, jpath = _journaled_registry(tmp_path, models)
+    n_lines = len(open(jpath).read().splitlines())
+    reg2, _ = recover_registry(jpath)
+    assert len(open(jpath).read().splitlines()) == n_lines
+    # ... but post-recovery registrations continue the same journal
+    reg2.register("a2", models["a"])
+    assert len(open(jpath).read().splitlines()) == n_lines + 1
+
+
+def test_eviction_is_journaled_and_replayed(tmp_path, models):
+    reg, jpath = _journaled_registry(tmp_path, models)
+    assert reg.unregister("a")
+    assert not reg.unregister("nope")
+    assert reg.model_ids() == ["b"]
+    reg2, report = recover_registry(jpath)
+    assert reg2.model_ids() == ["b"]
+    assert report.tenants["a"] == "evicted"
+    assert report.tenants["b"] == "recovered"
+
+
+def test_corrupt_record_detected_skipped_surfaced(tmp_path, models):
+    """A bit-flipped journal record must cost exactly its tenant: the CRC
+    catches it, replay skips it, the report surfaces it, and the sibling
+    tenant recovers fully."""
+    _, jpath = _journaled_registry(tmp_path, models)
+    lines = open(jpath).read().splitlines()
+    # flip one character inside the first (register "a") record's payload
+    bad = lines[0].replace('"op":"register"', '"op":"registeR"', 1)
+    with open(jpath, "w") as fh:
+        fh.write("\n".join([bad] + lines[1:]) + "\n")
+
+    reg, report = recover_registry(jpath)
+    assert not report.clean
+    assert report.records_skipped == 1
+    assert any("checksum mismatch" in reason for _, reason in report.corrupt)
+    assert reg.model_ids() == ["b"]
+    assert "[DEGRADED]" in report.summary()
+
+
+def test_torn_final_line_skipped(tmp_path, models):
+    """A crash mid-append leaves a torn last line; replay must recover
+    every complete record and surface the torn one."""
+    _, jpath = _journaled_registry(tmp_path, models)
+    with open(jpath, "a") as fh:
+        fh.write('{"op":"register","model_id":"half')  # no newline, torn
+    reg, report = recover_registry(jpath)
+    assert sorted(reg.model_ids()) == ["a", "b"]
+    assert report.records_skipped == 1
+    assert any("unparseable" in reason for _, reason in report.corrupt)
+
+
+def test_rebuild_group_appends_no_duplicate_records(tmp_path, models):
+    """Internal re-registrations (corrupted-plan group rebuild) must not
+    grow the journal — the source-of-truth records already exist."""
+    reg, jpath = _journaled_registry(tmp_path, models)
+    n_lines = len(open(jpath).read().splitlines())
+    assert reg.rebuild_group("a")
+    assert len(open(jpath).read().splitlines()) == n_lines
+
+
+def test_missing_journal_recovers_empty(tmp_path):
+    reg, report = recover_registry(str(tmp_path / "absent.journal"))
+    assert reg.model_ids() == []
+    assert report.records_total == 0 and report.clean
